@@ -1,0 +1,111 @@
+"""Paper Fig. 5 reproduction: Mandelbrot (z <- z^4 + c, 1152^2, CT=1000).
+
+Unlike PSIA, the paper quotes no absolute numbers for Fig. 5 in the text, so
+this benchmark validates the *qualitative* claims on the real cost profile
+(computed by our Mandelbrot oracle -- the actual escape-iteration counts):
+
+  C1: One_Sided is insensitive to coordinator placement (KNL vs Xeon).
+  C2: Two_Sided SS/GSS degrade with a KNL master.
+  C3: FAC2/WF show the least placement sensitivity.
+  C4: every DLS technique beats STATIC on this highly imbalanced loop.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import (
+    LoopSpec, SimConfig, mandelbrot_iteration_counts, paper_cluster,
+    simulate, weights_from_speeds,
+)
+
+TECHNIQUES = ["static", "ss", "gss", "tss", "fac2", "wf"]
+CACHE = "experiments/mandelbrot_counts_{w}_{ct}.npy"
+
+
+def costs_for(width=1152, ct=1000, blocks=None, sec_per_iter=2.4e-4):
+    """Per-task costs from real escape counts (cached; blocks of pixels)."""
+    path = CACHE.format(w=width, ct=ct)
+    if os.path.exists(path):
+        counts = np.load(path)
+    else:
+        counts = mandelbrot_iteration_counts(width=width, ct=ct)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        np.save(path, counts)
+    if blocks:
+        counts = np.array([b.sum() for b in np.array_split(counts, blocks)])
+    return counts * sec_per_iter
+
+
+def run(quick=False, seed=0):
+    # The paper schedules the W^2-pixel loop itself (Algorithm 2); that
+    # claim *frequency* is what saturates the Two_Sided master.  Quick mode
+    # shrinks the image but keeps per-pixel cost comparable via the
+    # iteration-time scale.
+    width, ct = (576, 500) if quick else (1152, 1000)
+    n_tasks = width * width
+    costs = costs_for(width, ct, blocks=None,
+                      sec_per_iter=4.8e-4 if quick else 2.4e-4)
+    rows = []
+    for ratio in ["2:1", "1:2"]:
+        for coord in ["knl", "xeon"]:
+            speeds, cidx = paper_cluster(ratio, coord)
+            for impl in ["one_sided", "two_sided"]:
+                for tech in TECHNIQUES:
+                    w = (tuple(weights_from_speeds(speeds))
+                         if tech == "wf" else None)
+                    spec = LoopSpec(tech, N=n_tasks, P=288, weights=w)
+                    r = simulate(SimConfig(spec, speeds, costs, impl=impl,
+                                           coordinator=cidx, seed=seed))
+                    rows.append(dict(tech=tech, impl=impl, ratio=ratio,
+                                     coord=coord, t_loop=r.T_loop, cov=r.cov,
+                                     claims=r.n_claims))
+    return rows
+
+
+def check_claims(rows):
+    d = {(r["tech"], r["impl"], r["ratio"], r["coord"]): r["t_loop"]
+         for r in rows}
+    out = {}
+    # C1: one-sided placement-insensitive (every technique, 2:1)
+    out["C1_one_sided_placement_insensitive"] = all(
+        abs(d[(t, "one_sided", "2:1", "knl")] - d[(t, "one_sided", "2:1", "xeon")])
+        / d[(t, "one_sided", "2:1", "xeon")] < 0.05 for t in TECHNIQUES)
+    # C2: two-sided SS degrades with KNL master
+    out["C2_two_sided_ss_degrades_knl_master"] = (
+        d[("ss", "two_sided", "2:1", "knl")]
+        > 1.5 * d[("ss", "two_sided", "2:1", "xeon")])
+    # C3 (paper 2nd observation): the factoring-based techniques (FAC2/WF)
+    # exhibit *reduced* placement sensitivity -- no worse than any other
+    # technique (ties allowed) and strictly better than SS.
+    sens = {t: d[(t, "two_sided", "2:1", "knl")] / d[(t, "two_sided", "2:1", "xeon")]
+            for t in ["ss", "gss", "tss", "fac2", "wf"]}
+    fac_worst = max(sens["fac2"], sens["wf"])
+    out["C3_factoring_least_sensitive"] = (
+        fac_worst < sens["ss"] and fac_worst <= min(sens.values()) + 0.02)
+    # C4: DLS beats STATIC on the imbalanced loop (one-sided, 2:1, knl)
+    stat = d[("static", "one_sided", "2:1", "knl")]
+    out["C4_dls_beats_static"] = all(
+        d[(t, "one_sided", "2:1", "knl")] < stat for t in ["ss", "gss", "tss", "fac2", "wf"])
+    return out, sens
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    print("tech,impl,ratio,coord,T_loop_s,cov,claims")
+    for r in rows:
+        print(f"{r['tech']},{r['impl']},{r['ratio']},{r['coord']},"
+              f"{r['t_loop']:.1f},{r['cov']:.3f},{r['claims']}")
+    claims, sens = check_claims(rows)
+    for k, v in claims.items():
+        print(f"# {k}: {'PASS' if v else 'FAIL'}")
+    print(f"# two-sided knl/xeon sensitivity: "
+          + ", ".join(f"{t}={s:.2f}" for t, s in sens.items()))
+    return rows, claims
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(quick="--quick" in sys.argv)

@@ -1,0 +1,84 @@
+"""Kernel micro-benchmarks.
+
+CPU caveat: Pallas kernels execute in interpret mode here, so wall-times
+measure the *oracle-equivalent XLA path*; the structural numbers that carry
+to TPU are the FLOP counts (from compiled cost_analysis) and the block/VMEM
+footprints, reported alongside.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def flops_of(fn, *args):
+    try:
+        c = jax.jit(fn).lower(*args).compile().cost_analysis()
+        return c.get("flops", 0.0)
+    except Exception:
+        return 0.0
+
+
+def main(quick=False):
+    from repro.kernels import (
+        attention_oracle, flash_attention, mandelbrot, mandelbrot_ref,
+        ssd_scan, ssd_scan_oracle,
+    )
+
+    print("name,us_per_call,derived")
+    rng = np.random.default_rng(0)
+
+    # mandelbrot: per-pixel-iteration cost
+    w, ct = (128, 200) if quick else (256, 500)
+    us = _timeit(lambda: mandelbrot(w, ct=ct))
+    counts = np.asarray(mandelbrot_ref(w, ct=ct))
+    print(f"mandelbrot_{w}x{w}_ct{ct},{us:.0f},iters={counts.sum():.2e}")
+
+    # flash attention vs dense oracle (same shapes)
+    B, H, T, D = (1, 4, 512, 64) if quick else (2, 8, 1024, 64)
+    q = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    us_fa = _timeit(lambda: flash_attention(q, k, v, causal=True))
+    us_ref = _timeit(lambda: attention_oracle(q, k, v, causal=True))
+    fl = 4.0 * B * H * T * T * D  # qk + pv
+    print(f"flash_attention_T{T},{us_fa:.0f},tflops_equiv={fl/us_fa/1e6:.3f}")
+    print(f"attention_oracle_T{T},{us_ref:.0f},interpret_ratio={us_fa/us_ref:.1f}x")
+
+    # ssd scan: chunked vs sequential oracle
+    Bs, Ts, Hs, Dh, S = (1, 512, 4, 32, 32) if quick else (2, 1024, 8, 64, 64)
+    x = jnp.asarray(rng.normal(size=(Bs, Ts, Hs, Dh)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, size=(Bs, Ts, Hs)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(Hs,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(Bs, Ts, S)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(Bs, Ts, S)), jnp.float32)
+    us_k = _timeit(lambda: ssd_scan(x, dt, A, Bm, Cm))
+    us_r = _timeit(lambda: ssd_scan_oracle(x, dt, A, Bm, Cm))
+    print(f"ssd_scan_T{Ts},{us_k:.0f},chunked_vs_seq={us_r/us_k:.2f}x")
+
+    # spin image
+    from repro.kernels import spin_images
+
+    npts = 512 if quick else 2048
+    pts = jnp.asarray(rng.normal(size=(npts, 3)), jnp.float32)
+    nrm = pts / jnp.linalg.norm(pts, axis=1, keepdims=True)
+    m = 32 if quick else 128
+    us_si = _timeit(lambda: spin_images(pts, nrm, m, bin_size=0.5))
+    print(f"spin_images_M{m}_N{npts},{us_si:.0f},pairs={m*npts}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(quick="--quick" in sys.argv)

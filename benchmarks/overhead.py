@@ -1,0 +1,102 @@
+"""Scheduling-overhead microbenchmarks + large-P scalability analysis.
+
+Part 1 (threaded, real concurrency): claim latency/throughput of the
+one-sided window (two atomic fetch-adds) vs the two-sided master queue, over
+thread counts.  This is the mechanism-level contrast behind the paper's
+results, measured rather than simulated.
+
+Part 2 (DES, the paper's listed future work): claim latency and T_p^loop
+scaling at P = 288 / 1024 / 4096 PEs, showing where each protocol's
+serialization point saturates (master CPU vs window NIC).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import (
+    LoopSpec, OneSidedRuntime, SimConfig, TwoSidedRuntime, simulate,
+)
+from repro.core.rma import ThreadWindow
+
+
+def bench_one_sided(n_threads=8, n=200_000):
+    spec = LoopSpec("ss", N=n, P=n_threads)
+    rt = OneSidedRuntime(spec, ThreadWindow())
+    t0 = time.perf_counter()
+
+    def worker(pe):
+        while rt.claim(pe) is not None:
+            pass
+
+    ts = [threading.Thread(target=worker, args=(j,)) for j in range(n_threads)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    dt = time.perf_counter() - t0
+    return dt / n * 1e6  # us per claim
+
+
+def bench_two_sided(n_threads=8, n=200_000):
+    spec = LoopSpec("ss", N=n, P=n_threads)
+    rt = TwoSidedRuntime(spec)
+    t0 = time.perf_counter()
+    stop = threading.Event()
+
+    def master():
+        while not stop.is_set():
+            rt.serve_blocking(timeout=0.01)
+
+    def worker(pe):
+        while True:
+            c = rt.request(pe).get()
+            if c is None:
+                return
+
+    mt = threading.Thread(target=master)
+    mt.start()
+    ts = [threading.Thread(target=worker, args=(j,)) for j in range(1, n_threads)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    stop.set()
+    mt.join()
+    dt = time.perf_counter() - t0
+    return dt / n * 1e6
+
+
+def scaling_des(P_list=(288, 1024, 4096), iters_per_pe=200):
+    """DES: homogeneous cluster, SS; how claim latency grows with P."""
+    rows = []
+    for P in P_list:
+        n = P * iters_per_pe
+        costs = np.full(n, 0.05)
+        speeds = np.ones(P)
+        for impl in ["one_sided", "two_sided"]:
+            spec = LoopSpec("ss", N=n, P=P)
+            r = simulate(SimConfig(spec, speeds, costs, impl=impl))
+            ideal = n * 0.05 / P
+            rows.append(dict(P=P, impl=impl, t_loop=r.T_loop,
+                             efficiency=ideal / r.T_loop,
+                             claim_lat_us=r.mean_claim_latency * 1e6))
+    return rows
+
+
+def main(quick=False):
+    n = 20_000 if quick else 200_000
+    print("name,us_per_call,derived")
+    for nt in ([2, 8] if quick else [2, 4, 8, 16]):
+        one = bench_one_sided(nt, n)
+        two = bench_two_sided(nt, n)
+        print(f"one_sided_claim_p{nt},{one:.2f},")
+        print(f"two_sided_claim_p{nt},{two:.2f},ratio={two/one:.2f}x")
+    print("# DES scalability (paper future work): P, impl, T_loop, efficiency")
+    for r in scaling_des((288, 1024) if quick else (288, 1024, 4096)):
+        print(f"des_scale_{r['impl']}_P{r['P']},{r['claim_lat_us']:.1f},"
+              f"eff={r['efficiency']:.3f}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(quick="--quick" in sys.argv)

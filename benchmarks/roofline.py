@@ -1,0 +1,168 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, derive the three terms from the compiled
+program (per-device quantities; the dry-run JSONs are the source):
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth
+  collective = modeled collective bytes moved per device / ICI link bandwidth
+
+Hardware constants (TPU v5e, per the brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s per ICI link.  ``cost_analysis()`` on the SPMD-partitioned module is
+already per-device.  Collective bytes use the ring model recorded by
+``dryrun.parse_collectives``.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per trained token --
+the ratio MODEL_FLOPS / HLO_FLOPs shows how much compiled compute is
+"useful" (remat recompute, masked attention waste, router overhead...).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+TRAIN_SHAPES = {"train_4k"}
+
+
+def model_flops_for(rec) -> float:
+    """Theoretical useful FLOPs for the whole step, all chips."""
+    n_active = rec["active_params"]
+    shape = rec["shape"]
+    if shape == "train_4k":
+        tokens = 256 * 4096
+        return 6.0 * n_active * tokens
+    if shape == "prefill_32k":
+        tokens = 32 * 32768
+        return 2.0 * n_active * tokens
+    if shape == "decode_32k":
+        tokens = 128  # one token per sequence
+        return 2.0 * n_active * tokens
+    if shape == "long_500k":
+        return 2.0 * n_active * 1
+    raise ValueError(shape)
+
+
+def analyze(rec) -> dict:
+    chips = rec["n_chips"]
+    flops_dev = rec["cost"]["flops"]  # per device (post-SPMD module)
+    bytes_dev = rec["cost"]["bytes_accessed"]
+    coll_dev = rec["collective_moved_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_for(rec)
+    useful_ratio = mf / (flops_dev * chips) if flops_dev else 0.0
+    # roofline fraction: useful work per chip over what the dominant
+    # bottleneck permits.  step_time >= max(terms); ideal = mf/(chips*peak)
+    t_ideal = mf / (chips * PEAK_FLOPS)
+    t_bound = max(terms.values())
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        status=rec["status"],
+        compute_s=t_compute, memory_s=t_memory, collective_s=t_coll,
+        dominant=dominant,
+        model_flops=mf, hlo_flops_total=flops_dev * chips,
+        useful_ratio=useful_ratio,
+        roofline_fraction=(t_ideal / t_bound) if t_bound > 0 else 0.0,
+        peak_gib=rec["memory"]["peak_bytes"] / 2**30,
+        fits_hbm=rec["memory"]["peak_bytes"] <= 16 * 2**30,
+        tag=rec.get("tag", ""),
+    )
+
+
+def load_all(dirpath="experiments/dryrun", mesh="pod", tag=""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("mesh") != mesh or rec.get("tag", "") != tag:
+            continue
+        if rec["status"] == "ok":
+            rows.append(analyze(rec))
+        else:
+            rows.append(dict(arch=rec["arch"], shape=rec["shape"],
+                             mesh=rec["mesh"], status=rec["status"],
+                             reason=rec.get("reason", rec.get("error", ""))[:60]))
+    return rows
+
+
+def compare_table(base_rows, opt_rows) -> str:
+    """Baseline vs optimized, per cell: dominant-term delta + roofline%."""
+    key = lambda r: (r["arch"], r["shape"])
+    b = {key(r): r for r in base_rows if r["status"] == "ok"}
+    o = {key(r): r for r in opt_rows if r["status"] == "ok"}
+    hdr = (f"{'arch':26s} {'shape':12s} {'base_dom':>22s} {'opt_dom':>22s} "
+           f"{'speedup':>8s} {'roofl%':>14s}")
+    lines = [hdr, "-" * len(hdr)]
+    for kk in sorted(set(b) | set(o)):
+        rb, ro = b.get(kk), o.get(kk)
+        if not (rb and ro):
+            continue
+        tb = max(rb["compute_s"], rb["memory_s"], rb["collective_s"])
+        to = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        lines.append(
+            f"{kk[0]:26s} {kk[1]:12s} "
+            f"{rb['dominant'][:5]:>6s}{tb*1e3:14.1f}ms "
+            f"{ro['dominant'][:5]:>6s}{to*1e3:14.1f}ms "
+            f"{tb/to:7.2f}x "
+            f"{rb['roofline_fraction']*100:5.1f}->{ro['roofline_fraction']*100:5.1f}%")
+    return "\n".join(lines)
+
+
+def table(rows) -> str:
+    hdr = (f"{'arch':26s} {'shape':12s} {'comp_ms':>9s} {'mem_ms':>9s} "
+           f"{'coll_ms':>9s} {'dom':>6s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'GiB/dev':>8s} {'fits':>5s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:26s} {r['shape']:12s} "
+                         f"[{r['status']}: {r.get('reason','')}]")
+            continue
+        lines.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['compute_s']*1e3:9.2f} "
+            f"{r['memory_s']*1e3:9.2f} {r['collective_s']*1e3:9.2f} "
+            f"{r['dominant'][:6]:>6s} {r['useful_ratio']*100:6.1f}% "
+            f"{r['roofline_fraction']*100:6.1f}% {r['peak_gib']:8.2f} "
+            f"{'y' if r['fits_hbm'] else 'NO':>5s}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--compare", action="store_true",
+                    help="baseline (tag=base) vs optimized side-by-side")
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+    if args.compare:
+        print(compare_table(load_all(args.dir, args.mesh, tag="base"),
+                            load_all(args.dir, args.mesh)))
+        return
+    rows = load_all(args.dir, args.mesh, tag=args.tag)
+    print(table(rows))
+    if args.csv:
+        import csv
+
+        keys = ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+                "collective_s", "dominant", "model_flops", "hlo_flops_total",
+                "useful_ratio", "roofline_fraction", "peak_gib", "fits_hbm"]
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, keys, extrasaction="ignore")
+            w.writeheader()
+            w.writerows(rows)
+        print(f"wrote {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Benchmark aggregator: one section per paper table/figure + system benches.
+
+``python -m benchmarks.run``         -- quick mode (CI-friendly, ~2-4 min)
+``python -m benchmarks.run --full``  -- paper-scale DES grids (tens of min)
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness convention;
+section headers are comment lines.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    quick = not full
+    t0 = time.time()
+
+    print("# === Table 2: chunk calculus (closed form vs recurrence) ===")
+    from benchmarks import table2_chunks
+
+    table2_chunks.main(N=100_000 if quick else 1_000_000)
+
+    print("# === Fig. 4: PSIA DES grid (calibration in EXPERIMENTS.md) ===")
+    from benchmarks import fig4_psia
+
+    fig4_psia.main(quick=quick)
+
+    print("# === Fig. 5: Mandelbrot DES grid (qualitative claims) ===")
+    from benchmarks import fig5_mandelbrot
+
+    fig5_mandelbrot.main(quick=quick)
+
+    print("# === Beyond-paper techniques (TFSS / AWF / bounded chunks) ===")
+    from benchmarks import beyond_paper
+
+    beyond_paper.main()
+
+    print("# === Scheduling overhead + scalability ===")
+    from benchmarks import overhead
+
+    overhead.main(quick=quick)
+
+    print("# === Kernels (interpret mode; see header caveat) ===")
+    from benchmarks import kernels_bench
+
+    kernels_bench.main(quick=quick)
+
+    print("# === Roofline (from dry-run artifacts, if present) ===")
+    try:
+        from benchmarks import roofline
+
+        rows = roofline.load_all()
+        if rows:
+            print(roofline.table(rows))
+        else:
+            print("# no dry-run artifacts found; run "
+                  "python -m repro.launch.dryrun --all first")
+    except Exception as e:  # noqa: BLE001
+        print(f"# roofline unavailable: {e}")
+
+    print(f"# total benchmark wall time: {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""End-to-end training driver: a ~100M-param LM, a few hundred steps, with
+the full substrate engaged -- DLS-claimed data, AdamW, checkpointing +
+auto-resume, AWF throughput feedback.
+
+Presets (1 CPU core reality: the 100m preset takes hours; `small` shows the
+identical code path in minutes):
+
+    PYTHONPATH=src python examples/train_e2e.py --preset small --steps 200
+    PYTHONPATH=src python examples/train_e2e.py --preset 100m  --steps 300
+
+Kill it mid-run and re-run: it resumes from the checkpoint, including the
+DLS epoch state (the window counters ride in the checkpoint manifest).
+"""
+import argparse
+
+from repro.configs.base import ModelConfig
+from repro.optim import AdamWConfig
+from repro.train import TrainConfig, Trainer
+
+PRESETS = {
+    # ~9M params: CPU-friendly, same code path
+    "small": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+                  d_ff=1024, vocab=4096, batch=8, seq=256),
+    # ~113M params: the deliverable scale (slow on 1 CPU core)
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=3072, vocab=8192, batch=8, seq=512),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro_e2e_ckpt")
+    ap.add_argument("--technique", default="fac2")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(
+        name=f"e2e-{args.preset}", family="dense", n_layers=p["n_layers"],
+        d_model=p["d_model"], n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"],
+        d_ff=p["d_ff"], vocab=p["vocab"], dtype="float32")
+    print(f"[e2e] {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+
+    tcfg = TrainConfig(
+        steps=args.steps, per_host_batch=p["batch"], seq_len=p["seq"],
+        n_samples=50_000, technique=args.technique,
+        ckpt_dir=args.ckpt, ckpt_every=25, log_every=10)
+    trainer = Trainer(cfg, tcfg, AdamWConfig(lr=3e-4, total_steps=args.steps,
+                                             warmup_steps=20))
+    trainer.run()
+    print(f"[e2e] loss {trainer.history[0]:.4f} -> {trainer.history[-1]:.4f} "
+          f"over {len(trainer.history)} steps this run")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: distributed chunk-calculation DLS (Eleliemy & Ciorba 2018) as the
+work-distribution layer of a multi-pod JAX training/serving framework."""
+__version__ = "1.0.0"

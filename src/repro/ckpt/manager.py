@@ -1,0 +1,173 @@
+"""Fault-tolerant checkpointing: async, atomic, keep-N, auto-resume.
+
+Layout (one directory per step):
+
+    <root>/step_000123/
+        manifest.json          tree structure + dtypes/shapes + extra state
+        arrays_h<host>.npz     flat param/opt arrays (this host's shards)
+    <root>/LATEST              text file: "step_000123"  (atomic rename)
+
+Writes happen on a background thread against ``step_xxx.tmp`` and are
+published by a single atomic rename + LATEST update, so a killed process can
+never leave a half-written checkpoint as "latest" (restart-safe).  The DLS
+window counters (data-pipeline epoch state) ride along in the manifest --
+after a crash the self-scheduled epoch resumes at the exact loop pointer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _manifest_entry(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep_n: int = 3, host_id: int = 0,
+                 async_save: bool = True):
+        self.root = root
+        self.keep_n = keep_n
+        self.host_id = host_id
+        os.makedirs(root, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._async = async_save
+        if async_save:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             block: bool = False):
+        """Snapshot ``tree`` (any pytree of arrays) at ``step``.
+
+        Arrays are device_get *synchronously* (a consistent snapshot), the
+        file I/O happens on the writer thread.
+        """
+        if self._err is not None:
+            raise RuntimeError("previous async save failed") from self._err
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        payload = (step, host_leaves, jax.tree_util.tree_structure(tree),
+                   [ _manifest_entry(x) for x in host_leaves ], extra or {})
+        if self._async:
+            # all writes go through the single worker thread (no concurrent
+            # _write: LATEST.tmp and GC are not multi-writer safe)
+            self._q.put(payload)
+            if block:
+                self.wait()
+        else:
+            self._write(*payload)
+
+    def wait(self):
+        """Block until all queued saves are on disk."""
+        self._q.join()
+        if self._err is not None:
+            raise RuntimeError("async save failed") from self._err
+
+    def _worker(self):
+        while True:
+            payload = self._q.get()
+            try:
+                self._write(*payload)
+            except BaseException as e:  # surfaced on next save()/wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    @staticmethod
+    def _to_npz_safe(a: np.ndarray) -> np.ndarray:
+        """npz cannot store ml_dtypes (bfloat16 etc.) -- view as raw uint."""
+        if a.dtype.kind == "V" or a.dtype.name in ("bfloat16", "float8_e4m3fn",
+                                                   "float8_e5m2"):
+            return a.view(np.dtype(f"u{a.dtype.itemsize}"))
+        return a
+
+    @staticmethod
+    def _from_npz_safe(a: np.ndarray, dtype_name: str) -> np.ndarray:
+        if a.dtype.kind == "u" and dtype_name in ("bfloat16", "float8_e4m3fn",
+                                                  "float8_e5m2"):
+            import ml_dtypes
+
+            return a.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+        return a
+
+    def _write(self, step, leaves, treedef, manifest_entries, extra):
+        name = f"step_{step:09d}"
+        tmp = os.path.join(self.root, name + f".tmp{self.host_id}")
+        final = os.path.join(self.root, name)
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"arrays_h{self.host_id}.npz"),
+                 **{str(i): self._to_npz_safe(a) for i, a in enumerate(leaves)})
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "leaves": manifest_entries,
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        # atomic publish
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        with open(os.path.join(self.root, "LATEST.tmp"), "w") as f:
+            f.write(name)
+        os.replace(os.path.join(self.root, "LATEST.tmp"),
+                   os.path.join(self.root, "LATEST"))
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.root) if d.startswith("step_")
+                       and not d.endswith(".tmp%d" % self.host_id))
+        for d in steps[: -self.keep_n] if self.keep_n else []:
+            shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.root, "LATEST")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            name = f.read().strip()
+        if not os.path.isdir(os.path.join(self.root, name)):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, like_tree: Any, step: Optional[int] = None):
+        """Returns (tree, extra) with arrays shaped/dtyped like ``like_tree``.
+
+        ``like_tree`` provides the pytree structure (and sanity-checks
+        shapes); pass e.g. the freshly-initialized params.
+        """
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None, None
+        d = os.path.join(self.root, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        z = np.load(os.path.join(d, f"arrays_h{self.host_id}.npz"))
+        leaves_ref, treedef = _flatten(like_tree)
+        leaves = []
+        for i, ref in enumerate(leaves_ref):
+            arr = self._from_npz_safe(z[str(i)], manifest["leaves"][i]["dtype"])
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"checkpoint leaf {i} shape {arr.shape} != expected {ref.shape}")
+            leaves.append(arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return tree, manifest["extra"]

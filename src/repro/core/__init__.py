@@ -1,0 +1,42 @@
+"""Core of the paper's contribution: distributed chunk-calculation DLS.
+
+Layers:
+  chunk_calculus -- Table-2 recurrences + Eq.1-3 closed forms + batched planner
+  rma            -- passive-target window (fetch_add) backends
+  scheduler      -- One_Sided / Two_Sided runtimes over threads or hosts
+  weights        -- WF static weights + AWF adaptive reweighting (stragglers)
+  sim            -- discrete-event simulator (paper Fig. 4/5 reproduction)
+"""
+from .chunk_calculus import (  # noqa: F401
+    TECHNIQUES,
+    WEIGHTED,
+    LoopSpec,
+    chunk_series_recurrence,
+    chunk_size_closed,
+    chunk_sizes_closed,
+    max_steps_bound,
+    plan,
+    plan_jax,
+    scheduling_steps,
+    tss_constants,
+)
+from .rma import KVStoreWindow, ThreadWindow, Window, make_window  # noqa: F401
+from .scheduler import (  # noqa: F401
+    Claim,
+    OneSidedRuntime,
+    TwoSidedRuntime,
+    run_threaded_one_sided,
+    run_threaded_two_sided,
+)
+from .sim import (  # noqa: F401
+    KNL_SPEED,
+    XEON_SPEED,
+    SimConfig,
+    SimResult,
+    mandelbrot_costs,
+    mandelbrot_iteration_counts,
+    paper_cluster,
+    psia_costs,
+    simulate,
+)
+from .weights import WeightBoard, coefficient_of_variation, weights_from_speeds  # noqa: F401

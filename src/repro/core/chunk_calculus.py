@@ -1,0 +1,310 @@
+"""Chunk calculus for dynamic loop self-scheduling (DLS).
+
+This module is the mathematical heart of the paper (Table 2 + Eq. 1-3 of
+Eleliemy & Ciorba 2018): for each self-scheduling technique it provides
+
+  * the **recurrence form** ``chunk_series_recurrence`` -- the classical
+    master-side computation ``K_i = f(K_{i-1}, R_i)`` (Table 2), which is
+    inherently sequential, and
+  * the **closed form** ``chunk_size_closed`` -- ``K'_i`` as a pure function
+    of the scheduling-step index ``i`` alone (Eq. 1-3), which is what makes
+    the *distributed* chunk calculation possible: any PE that atomically
+    fetches an ``i`` can compute its chunk with no other shared state,
+  * a **batched planner** ``plan`` -- the TPU-native corollary: because
+    ``K'_i`` is index-only, chunk *starts* are ``cumsum(K'_0..K'_{i-1})``,
+    i.e. an associative scan.  A whole schedule can be materialized in one
+    vectorized pass (numpy) or on-device (``plan_jax``).  The master-worker
+    recurrence cannot do this.  This is recorded in DESIGN.md as the key
+    beyond-paper optimization the closed forms unlock.
+
+Techniques: STATIC, SS, GSS, TSS, FAC2, WF (paper) + TFSS, AWF (beyond
+paper; Chronopoulos 2005 / Banicescu 2003 -- the paper cites both families
+as derived work).
+
+Everything here is host-plane math over integers; numpy is the default
+backend.  ``chunk_sizes_closed`` also accepts ``jnp`` arrays and is
+traceable (used by ``plan_jax`` and the on-device planner tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+TECHNIQUES = ("static", "ss", "gss", "tss", "fac2", "wf", "tfss", "awf")
+
+# Techniques whose chunk size depends on the claiming PE's weight.
+WEIGHTED = ("wf", "awf")
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopSpec:
+    """A scheduling problem: N independent iterations over P processing elements."""
+
+    technique: str
+    N: int
+    P: int
+    # Relative PE weights (sum == P), only used by WF/AWF.  Defaults to uniform.
+    weights: Optional[tuple] = None
+    # SS/FAC2 style minimum chunk; also TSS's K_{S-1}.
+    min_chunk: int = 1
+    # Optional chunk-size cap (beyond-paper FT refinement): bounds the work
+    # lost when a PE dies mid-chunk.  Still a pure function of i, so the
+    # distributed protocol is unchanged.
+    max_chunk: Optional[int] = None
+
+    def __post_init__(self):
+        if self.technique not in TECHNIQUES:
+            raise ValueError(f"unknown technique {self.technique!r}; pick from {TECHNIQUES}")
+        if self.N <= 0 or self.P <= 0:
+            raise ValueError("N and P must be positive")
+        if self.weights is not None and len(self.weights) != self.P:
+            raise ValueError("weights must have length P")
+
+    def weight(self, pe: int) -> float:
+        if self.weights is None:
+            return 1.0
+        return float(self.weights[pe])
+
+
+# ---------------------------------------------------------------------------
+# TSS constants (paper Table 2): K_0 = ceil(N/2P), K_{S-1} = 1,
+# S = ceil(2N / (K_0 + K_{S-1})), C = floor((K_0 - K_{S-1}) / (S - 1)).
+# ---------------------------------------------------------------------------
+
+def tss_constants(N: int, P: int, min_chunk: int = 1):
+    K0 = max(int(math.ceil(N / (2.0 * P))), min_chunk)
+    Klast = min_chunk
+    S = max(int(math.ceil(2.0 * N / (K0 + Klast))), 1)
+    C = 0 if S <= 1 else (K0 - Klast) // (S - 1)
+    return K0, Klast, S, C
+
+
+# ---------------------------------------------------------------------------
+# Closed forms (paper Eq. 1-3).  Pure functions of the step index i.
+# ---------------------------------------------------------------------------
+
+def chunk_size_closed(spec: LoopSpec, i: int, pe: int = 0) -> int:
+    """K'_i -- chunk size at scheduling step ``i`` (closed form, scalar).
+
+    This is exactly what a PE computes in Step 2 of the paper's protocol,
+    using only its private copy of ``i`` (and, for WF/AWF, its own weight).
+    """
+    k = _chunk_size_closed(spec, i, pe)
+    return min(k, spec.max_chunk) if spec.max_chunk else k
+
+
+def _chunk_size_closed(spec: LoopSpec, i: int, pe: int = 0) -> int:
+    t, N, P = spec.technique, spec.N, spec.P
+    if t == "static":
+        return int(math.ceil(N / P))
+    if t == "ss":
+        return spec.min_chunk
+    if t == "gss":
+        # Eq. 1: K'_i = ceil(((P-1)/P)^i * N/P)
+        return max(int(math.ceil(((P - 1.0) / P) ** i * N / P)), spec.min_chunk)
+    if t == "tss":
+        # Eq. 2: K'_i = K_0 - i*C
+        K0, Klast, S, C = tss_constants(N, P, spec.min_chunk)
+        return max(K0 - i * C, Klast)
+    if t == "fac2":
+        # Eq. 3: K'_i = ceil((1/2)^(floor(i/P)+1) * N/P)
+        b = i // P + 1
+        return max(int(math.ceil(0.5 ** b * N / P)), spec.min_chunk)
+    if t in ("wf", "awf"):
+        # WF inherits the transformed FAC2 function, scaled by the claimer's
+        # relative weight (paper Table 2 last row).
+        b = i // P + 1
+        base = 0.5 ** b * N / P
+        return max(int(math.ceil(spec.weight(pe) * base)), spec.min_chunk)
+    if t == "tfss":
+        # TFSS (Chronopoulos 2005): batches of P chunks, each the mean of the
+        # TSS chunks of that batch -- closed form via the TSS linear ramp.
+        K0, Klast, S, C = tss_constants(N, P, spec.min_chunk)
+        b = i // P
+        mean = K0 - (b * P + (P - 1) / 2.0) * C
+        return max(int(math.ceil(mean)), Klast)
+    raise AssertionError(t)
+
+
+def chunk_sizes_closed(spec: LoopSpec, idx, xp=np, weights_per_step=None):
+    """Vectorized K'_i over an array of step indices.
+
+    ``xp`` may be numpy or jax.numpy -- the expression is trace-friendly
+    (no data-dependent Python control flow).  ``weights_per_step`` optionally
+    supplies the claimer weight per step for WF/AWF.
+    """
+    k = _chunk_sizes_closed(spec, idx, xp, weights_per_step)
+    return xp.minimum(k, spec.max_chunk) if spec.max_chunk else k
+
+
+def _chunk_sizes_closed(spec: LoopSpec, idx, xp=np, weights_per_step=None):
+    t, N, P = spec.technique, spec.N, spec.P
+    idx = xp.asarray(idx)
+    fidx = idx.astype(xp.float64 if xp is np else xp.float32)
+    if t == "static":
+        return xp.full_like(idx, int(math.ceil(N / P)))
+    if t == "ss":
+        return xp.full_like(idx, spec.min_chunk)
+    if t == "gss":
+        k = xp.ceil(((P - 1.0) / P) ** fidx * (N / P))
+        return xp.maximum(k, spec.min_chunk).astype(idx.dtype)
+    if t == "tss":
+        K0, Klast, S, C = tss_constants(N, P, spec.min_chunk)
+        return xp.maximum(K0 - idx * C, Klast).astype(idx.dtype)
+    if t in ("fac2", "wf", "awf"):
+        b = idx // P + 1
+        base = (0.5 ** b.astype(fidx.dtype)) * (N / P)
+        if t in WEIGHTED and weights_per_step is not None:
+            base = base * xp.asarray(weights_per_step)
+        k = xp.ceil(base)
+        return xp.maximum(k, spec.min_chunk).astype(idx.dtype)
+    if t == "tfss":
+        K0, Klast, S, C = tss_constants(N, P, spec.min_chunk)
+        b = idx // P
+        mean = K0 - (b * P + (P - 1) / 2.0) * C
+        return xp.maximum(xp.ceil(mean), Klast).astype(idx.dtype)
+    raise AssertionError(t)
+
+
+def max_steps_bound(spec: LoopSpec) -> int:
+    """A safe upper bound on the number of scheduling steps S."""
+    base = _max_steps_bound(spec)
+    if spec.max_chunk:
+        # capped steps deliver exactly max_chunk each; uncapped ones are
+        # bounded by the technique's own bound
+        return base + -(-spec.N // spec.max_chunk) + spec.P
+    return base
+
+
+def _max_steps_bound(spec: LoopSpec) -> int:
+    t, N, P = spec.technique, spec.N, spec.P
+    if t == "static":
+        return P
+    if t == "ss":
+        return int(math.ceil(N / spec.min_chunk))
+    if t == "gss":
+        # K'_i >= 1, and the geometric part reaches < 1 after
+        # i > ln(P/N)/ln(1-1/P); afterwards chunks are 1.
+        if N <= P or P == 1:
+            return N
+        geo = int(math.ceil(math.log(N / P) / -math.log(1.0 - 1.0 / P))) + 1
+        return geo + N  # ultra-safe: tail of 1s can cover the remainder
+    if t in ("tss", "tfss"):
+        K0, Klast, S, C = tss_constants(N, P, spec.min_chunk)
+        return S + N // max(Klast, 1) + 1
+    if t in ("fac2", "wf", "awf"):
+        # batch b assigns ~ half the remainder; <= P*log2(N) + tail of 1s
+        return P * (int(math.ceil(math.log2(max(N, 2)))) + 2) + P
+    raise AssertionError(t)
+
+
+# ---------------------------------------------------------------------------
+# Recurrence forms (paper Table 2) -- the sequential master-side computation.
+# ---------------------------------------------------------------------------
+
+def chunk_series_recurrence(
+    spec: LoopSpec, pe_sequence: Optional[Sequence[int]] = None
+) -> list:
+    """Full chunk series computed the classical way (master-worker).
+
+    This is the paper's Table 2: the master tracks the remaining iterations
+    ``R`` (and ``K_{i-1}`` for TSS) and serves one claim at a time -- the
+    serialization the closed forms remove.  ``pe_sequence`` gives which PE
+    claims at each step (needed by WF to pick the weight); defaults to
+    round-robin.  Chunk sizes sum exactly to N (final chunk truncated).
+    """
+    t, N, P = spec.technique, spec.N, spec.P
+    K0, Klast, S, C = tss_constants(N, P, spec.min_chunk)
+    out = []
+    R = N
+    i = 0
+    k_tss = None  # TSS: previous chunk (untruncated)
+    batch_base = None  # FAC2/WF/TFSS: chunk size fixed at batch start
+    while R > 0:
+        pe = pe_sequence[i] if pe_sequence is not None else i % P
+        if t == "static":
+            k = int(math.ceil(N / P))
+        elif t == "ss":
+            k = spec.min_chunk
+        elif t == "gss":
+            k = max(int(math.ceil(R / P)), spec.min_chunk)
+        elif t == "tss":
+            k_tss = K0 if k_tss is None else max(k_tss - C, Klast)
+            k = k_tss
+        elif t in ("fac2", "wf", "awf"):
+            if i % P == 0:  # new batch: half the remainder, split P ways
+                batch_base = max(int(math.ceil(R / (2.0 * P))), spec.min_chunk)
+            k = batch_base
+            if t in WEIGHTED:
+                k = max(int(math.ceil(spec.weight(pe) * batch_base)), spec.min_chunk)
+        elif t == "tfss":
+            if i % P == 0:  # mean of this batch's P TSS ramp values
+                first = K0 - i * C
+                mean = first - (P - 1) / 2.0 * C
+                batch_base = max(int(math.ceil(mean)), Klast)
+            k = batch_base
+        else:
+            raise AssertionError(t)
+        if spec.max_chunk:
+            k = min(k, spec.max_chunk)
+        k = min(k, R)
+        out.append(k)
+        R -= k
+        i += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batched planner (beyond paper): closed form + prefix sum.
+# ---------------------------------------------------------------------------
+
+def plan(spec: LoopSpec, weights_per_step=None):
+    """Materialize the whole schedule: (sizes, starts), both int64 numpy.
+
+    sizes sum exactly to N; starts[i] = cumsum(sizes[:i]).  This is the
+    vectorized realization of the paper's Step-1..3 protocol when claims are
+    conflict-free (planning mode), used by the deterministic data-pipeline
+    sharder and by tests as the ground truth partition.
+    """
+    S_hi = max_steps_bound(spec)
+    idx = np.arange(S_hi, dtype=np.int64)
+    sizes = chunk_sizes_closed(spec, idx, np, weights_per_step).astype(np.int64)
+    csum = np.cumsum(sizes)
+    # first index where cumulative >= N
+    cut = int(np.searchsorted(csum, spec.N))
+    sizes = sizes[: cut + 1].copy()
+    csum = csum[: cut + 1]
+    sizes[-1] -= int(csum[-1] - spec.N)  # truncate final chunk
+    if sizes[-1] == 0:
+        sizes = sizes[:-1]
+    starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    return sizes, starts
+
+
+def plan_jax(spec: LoopSpec, max_steps: Optional[int] = None):
+    """On-device planner: returns (sizes, starts, n_valid) as jnp arrays.
+
+    Fixed-shape (padded to ``max_steps``) so it can live inside jit.  Padding
+    chunks have size 0.  This is the TPU-native batched form of the paper's
+    distributed chunk calculation.
+    """
+    import jax.numpy as jnp
+
+    S_hi = int(max_steps or max_steps_bound(spec))
+    idx = jnp.arange(S_hi, dtype=jnp.int32)
+    sizes = chunk_sizes_closed(spec, idx, jnp).astype(jnp.int32)
+    csum = jnp.cumsum(sizes)
+    prev = csum - sizes  # exclusive prefix
+    # clamp each chunk into [0, N): size = clip(N - prev, 0, size)
+    sizes = jnp.clip(jnp.minimum(sizes, spec.N - prev), 0, None)
+    starts = jnp.minimum(prev, spec.N)
+    n_valid = jnp.sum((sizes > 0).astype(jnp.int32))
+    return sizes, starts, n_valid
+
+
+def scheduling_steps(spec: LoopSpec) -> int:
+    """Number of scheduling steps S for the closed-form schedule."""
+    return len(plan(spec)[0])

@@ -1,0 +1,278 @@
+"""Self-scheduling runtimes: One_Sided (the paper) vs Two_Sided (baseline).
+
+``OneSidedRuntime`` is the paper's distributed chunk-calculation protocol:
+
+  Step 1: the PE atomically fetch-adds the step counter  ``i += 1``
+  Step 2: the PE computes ``K_i`` locally from its private copy of ``i``
+          (closed form -- no shared state needed)
+  Step 3: the PE atomically fetch-adds the loop pointer ``lp += K_i``
+  ...and executes iterations [lp, min(lp + K_i, N)).
+
+``TwoSidedRuntime`` is the classical master-worker baseline the paper
+compares against: a (non-dedicated) master owns the Table-2 recurrence and
+serves claims one at a time from a request queue.
+
+Both run over real threads (in-process "PEs") or over hosts (KVStoreWindow);
+the discrete-event simulator in ``sim.py`` has its own clocked versions of
+both protocols for the paper's heterogeneous-cluster experiments.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+from . import chunk_calculus as cc
+from .rma import ThreadWindow, Window
+
+_loop_ids = itertools.count()
+
+
+@dataclass
+class Claim:
+    step: int  # scheduling step index i
+    start: int  # first iteration (lp_start before accumulate)
+    size: int  # K_i, already truncated to [0, N)
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.size
+
+
+class OneSidedRuntime:
+    """Distributed chunk calculation via two atomic fetch-and-adds."""
+
+    def __init__(self, spec: cc.LoopSpec, window: Optional[Window] = None,
+                 loop_id: Optional[int] = None):
+        self.spec = spec
+        self.window = window if window is not None else ThreadWindow()
+        # Namespace the two counters per loop so monotonic KV backends work.
+        lid = next(_loop_ids) if loop_id is None else loop_id
+        self._ki = f"loop{lid}/i"
+        self._kl = f"loop{lid}/lp"
+
+    def claim(self, pe: int = 0, weight: Optional[float] = None) -> Optional[Claim]:
+        """One scheduling step for PE ``pe``; None when the loop is exhausted.
+
+        ``weight`` overrides the spec's static weight for this claim (used by
+        AWF, whose weights evolve during execution).
+        """
+        N = self.spec.N
+        # Fast-path exit: if the loop pointer is already past N, don't burn
+        # a step index.  (A stale read here is harmless -- Step 3 re-checks.)
+        if self.window.read(self._kl) >= N:
+            return None
+        i = self.window.fetch_add(self._ki, 1)  # Step 1
+        if weight is not None and self.spec.technique in cc.WEIGHTED:
+            # AWF: live weight overrides the spec's static one.  The closed
+            # form is the WF/FAC2 expression scaled by the claimer's weight.
+            import math
+
+            spec = self.spec
+            b = i // spec.P + 1
+            base = 0.5 ** b * spec.N / spec.P
+            k = max(int(math.ceil(weight * base)), spec.min_chunk)
+        else:
+            k = cc.chunk_size_closed(self.spec, i, pe)  # Step 2 (local)
+        start = self.window.fetch_add(self._kl, k)  # Step 3
+        if start >= N:
+            return None
+        return Claim(step=i, start=start, size=min(k, N - start))
+
+    def remaining_lower_bound(self) -> int:
+        return max(self.spec.N - self.window.read(self._kl), 0)
+
+
+class TwoSidedRuntime:
+    """Master-worker baseline: a master thread serves the Table-2 recurrence.
+
+    Workers put (pe, reply_queue) requests on a queue; the master pops one at
+    a time, advances the recurrence state (R, K_prev), and replies.  The
+    master is *non-dedicated*: ``master_work`` lets the owning thread also
+    execute loop chunks (the paper's setup) -- see ``run_threaded``.
+    """
+
+    _SHUTDOWN = object()
+
+    def __init__(self, spec: cc.LoopSpec):
+        self.spec = spec
+        self._req: "queue.Queue" = queue.Queue()
+        self._lock = threading.Lock()
+        self._R = spec.N
+        self._i = 0
+        self._k_tss: Optional[int] = None
+        self._batch_base: Optional[int] = None
+        self._K0, self._Klast, self._S, self._C = cc.tss_constants(
+            spec.N, spec.P, spec.min_chunk
+        )
+
+    # -- master-side recurrence (one claim), mirrors chunk_series_recurrence --
+    def _next_chunk(self, pe: int) -> Optional[Claim]:
+        import math
+
+        spec = self.spec
+        t, P = spec.technique, spec.P
+        with self._lock:
+            if self._R <= 0:
+                return None
+            R, i = self._R, self._i
+            if t == "static":
+                k = int(math.ceil(spec.N / P))
+            elif t == "ss":
+                k = spec.min_chunk
+            elif t == "gss":
+                k = max(int(math.ceil(R / P)), spec.min_chunk)
+            elif t == "tss":
+                self._k_tss = (
+                    self._K0 if self._k_tss is None else max(self._k_tss - self._C, self._Klast)
+                )
+                k = self._k_tss
+            elif t in ("fac2", "wf", "awf"):
+                if i % P == 0:
+                    self._batch_base = max(int(math.ceil(R / (2.0 * P))), spec.min_chunk)
+                k = self._batch_base
+                if t in cc.WEIGHTED:
+                    k = max(int(math.ceil(spec.weight(pe) * self._batch_base)), spec.min_chunk)
+            elif t == "tfss":
+                if i % P == 0:
+                    first = self._K0 - i * self._C
+                    mean = first - (P - 1) / 2.0 * self._C
+                    self._batch_base = max(int(math.ceil(mean)), self._Klast)
+                k = self._batch_base
+            else:
+                raise AssertionError(t)
+            k = min(k, R)
+            start = spec.N - self._R
+            self._R -= k
+            self._i += 1
+            return Claim(step=i, start=start, size=k)
+
+    # -- two-sided protocol --
+    def request(self, pe: int) -> "queue.Queue":
+        reply: "queue.Queue" = queue.Queue(maxsize=1)
+        self._req.put((pe, reply))
+        return reply
+
+    def serve_pending(self, limit: Optional[int] = None) -> int:
+        """Master serves up to ``limit`` queued requests; returns count served."""
+        served = 0
+        while limit is None or served < limit:
+            try:
+                item = self._req.get_nowait()
+            except queue.Empty:
+                break
+            if item is self._SHUTDOWN:
+                break
+            pe, reply = item
+            reply.put(self._next_chunk(pe))
+            served += 1
+        return served
+
+    def serve_blocking(self, timeout: float = 0.05) -> bool:
+        """Serve one request, blocking up to ``timeout``.  False on idle."""
+        try:
+            item = self._req.get(timeout=timeout)
+        except queue.Empty:
+            return False
+        if item is self._SHUTDOWN:
+            return False
+        pe, reply = item
+        reply.put(self._next_chunk(pe))
+        return True
+
+
+def run_threaded_one_sided(
+    spec: cc.LoopSpec,
+    work_fn: Callable[[int, int], None],
+    n_threads: Optional[int] = None,
+    window: Optional[Window] = None,
+    weight_fn: Optional[Callable[[int], float]] = None,
+) -> List[Claim]:
+    """Execute a real loop with the one-sided protocol over threads.
+
+    ``work_fn(start, stop)`` executes iterations [start, stop).  Returns all
+    claims (the partition of [0, N)).  ``weight_fn(pe)`` supplies live AWF
+    weights.
+    """
+    n_threads = n_threads or spec.P
+    rt = OneSidedRuntime(spec, window)
+    claims: List[List[Claim]] = [[] for _ in range(n_threads)]
+
+    def worker(pe: int):
+        while True:
+            w = weight_fn(pe) if weight_fn is not None else None
+            c = rt.claim(pe, weight=w)
+            if c is None:
+                return
+            work_fn(c.start, c.stop)
+            claims[pe].append(c)
+
+    threads = [threading.Thread(target=worker, args=(j,), name=f"dls-{j}")
+               for j in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return [c for per in claims for c in per]
+
+
+def run_threaded_two_sided(
+    spec: cc.LoopSpec,
+    work_fn: Callable[[int, int], None],
+    n_threads: Optional[int] = None,
+    master_pe: int = 0,
+) -> List[Claim]:
+    """Master-worker execution: PE ``master_pe`` is the non-dedicated master.
+
+    The master interleaves serving requests with executing its own chunks
+    (checks the queue between chunks, like the LB tool's breakAfter).
+    """
+    n_threads = n_threads or spec.P
+    rt = TwoSidedRuntime(spec)
+    claims: List[List[Claim]] = [[] for _ in range(n_threads)]
+    done = threading.Event()
+
+    def worker(pe: int):
+        while True:
+            reply = rt.request(pe)
+            c = reply.get()
+            if c is None:
+                return
+            work_fn(c.start, c.stop)
+            claims[pe].append(c)
+
+    def master():
+        my_claim: Optional[Claim] = None
+        workers_live = True
+        while True:
+            rt.serve_pending()
+            if my_claim is None:
+                my_claim = rt._next_chunk(master_pe)
+                if my_claim is None:
+                    # loop exhausted: keep serving until workers drain
+                    while not done.is_set():
+                        if not rt.serve_blocking(timeout=0.01):
+                            if done.is_set():
+                                break
+                    rt.serve_pending()
+                    return
+            work_fn(my_claim.start, my_claim.stop)
+            claims[master_pe].append(my_claim)
+            my_claim = None
+
+    threads = [
+        threading.Thread(target=worker, args=(j,), name=f"dls-{j}")
+        for j in range(n_threads)
+        if j != master_pe
+    ]
+    mt = threading.Thread(target=master)
+    for t in threads:
+        t.start()
+    mt.start()
+    for t in threads:
+        t.join()
+    done.set()
+    mt.join()
+    return [c for per in claims for c in per]

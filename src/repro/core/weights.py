@@ -1,0 +1,87 @@
+"""PE weights for WF, and adaptive reweighting (AWF) for straggler mitigation.
+
+WF (paper Table 2): static relative weights ``Wp_j`` with ``sum_j Wp_j == P``,
+fixed before execution (the paper derives them from core speeds).
+
+AWF (Banicescu et al., the paper's cited future-work direction): weights are
+*measured* during execution -- each PE's observed throughput (iterations per
+second over its completed chunks) updates its weight.  In this framework AWF
+is the straggler-mitigation mechanism of the training plane: per-host step
+timings feed a ``WeightBoard`` and the DLS sampler hands slow hosts smaller
+chunks (and dead hosts, weight 0 -- their unclaimed work is simply claimed by
+survivors, which is what makes the one-sided protocol naturally elastic).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+
+def weights_from_speeds(speeds: Sequence[float]) -> np.ndarray:
+    """Static WF weights from relative speeds: Wp_j = P * s_j / sum(s)."""
+    s = np.asarray(speeds, dtype=np.float64)
+    if np.any(s < 0):
+        raise ValueError("speeds must be non-negative")
+    total = s.sum()
+    if total <= 0:
+        raise ValueError("at least one PE must have positive speed")
+    return len(s) * s / total
+
+
+class WeightBoard:
+    """Thread-safe live weights with exponential-moving-average throughput.
+
+    ``record(pe, iters, seconds)`` after each chunk; ``weight(pe)`` returns the
+    current normalized weight (sum == number of live PEs).  ``mark_dead``
+    zeroes a PE (fault tolerance); ``revive`` restores it (elastic scale-up).
+    """
+
+    def __init__(self, P: int, ema: float = 0.5, initial_speeds: Optional[Sequence[float]] = None):
+        self.P = P
+        self.ema = ema
+        self._lock = threading.Lock()
+        init = np.asarray(initial_speeds, dtype=np.float64) if initial_speeds is not None else np.ones(P)
+        self._rate = init.copy()  # EMA of iterations/second
+        self._alive = np.ones(P, dtype=bool)
+
+    def record(self, pe: int, iters: int, seconds: float) -> None:
+        if seconds <= 0 or iters <= 0:
+            return
+        r = iters / seconds
+        with self._lock:
+            self._rate[pe] = self.ema * r + (1.0 - self.ema) * self._rate[pe]
+
+    def mark_dead(self, pe: int) -> None:
+        with self._lock:
+            self._alive[pe] = False
+
+    def revive(self, pe: int, rate: Optional[float] = None) -> None:
+        with self._lock:
+            self._alive[pe] = True
+            if rate is not None:
+                self._rate[pe] = rate
+
+    def weights(self) -> np.ndarray:
+        with self._lock:
+            r = np.where(self._alive, self._rate, 0.0)
+            total = r.sum()
+            n_live = int(self._alive.sum())
+            if total <= 0 or n_live == 0:
+                return np.ones(self.P)
+            return n_live * r / total
+
+    def weight(self, pe: int) -> float:
+        return float(self.weights()[pe])
+
+    def alive(self) -> np.ndarray:
+        with self._lock:
+            return self._alive.copy()
+
+
+def coefficient_of_variation(finish_times: Sequence[float]) -> float:
+    """Load-imbalance metric: c.o.v. of per-PE finish times (lower = better)."""
+    ft = np.asarray(finish_times, dtype=np.float64)
+    m = ft.mean()
+    return float(ft.std() / m) if m > 0 else 0.0

@@ -1,0 +1,2 @@
+"""Self-scheduled data pipeline."""
+from .pipeline import DLSSampler, EpochState, HostDataIterator, synth_tokens  # noqa: F401

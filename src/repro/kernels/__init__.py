@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+  mandelbrot      -- paper app 2: escape-time z<-z^4+c (variable-cost loop)
+  spin_image      -- paper app 1: PSIA histogram via one-hot reduction
+  flash_attention -- fused attention (causal/SWA/GQA), transformer hot spot
+  ssd_scan        -- Mamba2 SSD chunked scan with VMEM-carried state
+"""
+from .flash_attention.ops import attention_oracle, flash_attention  # noqa: F401
+from .mandelbrot.ops import mandelbrot, mandelbrot_ref  # noqa: F401
+from .spin_image.ops import spin_images, spin_images_oracle  # noqa: F401
+from .ssd_scan.ops import ssd_scan, ssd_scan_oracle  # noqa: F401

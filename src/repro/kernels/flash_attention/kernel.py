@@ -1,0 +1,158 @@
+"""Fused multi-head attention Pallas TPU kernel (flash-attention style).
+
+The transformer hot spot of the framework: online-softmax tiled attention
+with causal and sliding-window (SWA) masking and GQA (the kv-head index is
+derived *in the BlockSpec index map*, so grouped queries share kv tiles
+without materializing the expansion in HBM).
+
+Tiling: grid = (batch*heads, q blocks, kv blocks), kv innermost.  Running
+(max, denom, accum) state lives in VMEM scratch across kv blocks; the output
+tile is normalized and written on the last kv block.  Block shapes default to
+(128, 128) -- MXU-aligned for the two matmuls (q@k^T and p@v).  Fully-masked
+kv blocks (beyond the causal frontier or the SWA window) are skipped with
+``pl.when``, which is what makes long-context SWA linear-time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref,  # (1, blk_q, d)
+    k_ref,  # (1, blk_k, d)
+    v_ref,  # (1, blk_k, d)
+    o_ref,  # (1, blk_q, d)
+    acc_ref,  # scratch (blk_q, d) f32
+    m_ref,  # scratch (blk_q, LANES) f32
+    l_ref,  # scratch (blk_q, LANES) f32
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    seq_q: int,
+    seq_k: int,
+    blk_q: int,
+    blk_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * blk_q
+    k_start = ki * blk_k
+
+    # Static-shape skip test (trace-time constants qi/ki are dynamic, so the
+    # predicate is a traced bool -- pl.when skips the body at runtime).
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= k_start <= q_start + blk_q - 1  # block intersects causal tri
+    if window is not None:
+        relevant &= k_start + blk_k - 1 >= q_start - window  # inside SWA band
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (blk_q, d)
+        k = k_ref[0].astype(jnp.float32)  # (blk_k, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (blk_q, blk_k)
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        mask = (rows < seq_q) & (cols < seq_k)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]  # (blk_q, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # mask multiply (not just NEG_INF bias): when a whole row is masked,
+        # exp(NEG_INF - NEG_INF) would be 1 -- the mask kills those terms so
+        # l stays 0 and the flush writes zeros.
+        p = jnp.exp(s - m_new) * mask.astype(jnp.float32)  # (blk_q, blk_k)
+        alpha = jnp.exp(m_prev - m_new)  # (blk_q, 1)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        safe = jnp.where(l > 0.0, l, 1.0)  # fully-masked rows -> 0 output
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q,  # (B, H, Tq, D)
+    k,  # (B, Hkv, Tk, D)
+    v,  # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, H, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert H % Hkv == 0, "GQA requires H divisible by Hkv"
+    group = H // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    nq = -(-Tq // blk_q)
+    nk = -(-Tk // blk_k)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, nq * blk_q - Tq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, nk * blk_k - Tk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, nk * blk_k - Tk), (0, 0)))
+    qp = qp.reshape(B * H, nq * blk_q, D)
+    kp = kp.reshape(B * Hkv, nk * blk_k, D)
+    vp = vp.reshape(B * Hkv, nk * blk_k, D)
+
+    kern = functools.partial(
+        _fa_kernel,
+        scale=float(scale), causal=causal, window=window,
+        seq_q=Tq, seq_k=Tk, blk_q=blk_q, blk_k=blk_k,
+    )
+    LANES = 128
+    out = pl.pallas_call(
+        kern,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, D), lambda b, i, j: (b, i, 0)),
+            # GQA: grouped q heads read the same kv tile via the index map
+            pl.BlockSpec((1, blk_k, D), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, blk_k, D), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, nq * blk_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, D), jnp.float32),
+            pltpu.VMEM((blk_q, LANES), jnp.float32),
+            pltpu.VMEM((blk_q, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out.reshape(B, H, nq * blk_q, D)[:, :, :Tq, :]

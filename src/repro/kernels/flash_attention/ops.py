@@ -1,0 +1,26 @@
+"""Jitted public entry points for fused attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "blk_q", "blk_k", "interpret")
+)
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    blk_q=128, blk_k=128, interpret=None):
+    """Fused attention.  q (B,H,Tq,D); k,v (B,Hkv,Tk,D) -> (B,H,Tq,D)."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        blk_q=blk_q, blk_k=blk_k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale"))
+def attention_oracle(q, k, v, *, causal=True, window=None, scale=None):
+    return attention_ref(q, k, v, causal=causal, window=window, scale=scale)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for fused attention (dense softmax, f32)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """Dense attention with GQA + causal + sliding-window masking.
+
+    q: (B, H, Tq, D); k, v: (B, Hkv, Tk, D).  Matches the kernel's semantics
+    exactly, including zero output for fully-masked rows.
+    """
+    B, H, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    group = H // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    ke = jnp.repeat(k, group, axis=1)
+    ve = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), ke.astype(jnp.float32)) * scale
+    rows = jnp.arange(Tq)[:, None]
+    cols = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * mask[None, None].astype(jnp.float32)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, ve.astype(jnp.float32))
+    out = out / jnp.where(l > 0, l, 1.0)  # fully-masked rows -> zeros
+    return out.astype(q.dtype)

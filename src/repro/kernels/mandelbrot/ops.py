@@ -1,0 +1,27 @@
+"""Jitted public entry points for the Mandelbrot kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import mandelbrot_counts_pallas
+from .ref import mandelbrot_counts_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("width", "height", "ct", "xlim", "ylim", "block_h", "block_w", "interpret"),
+)
+def mandelbrot(width, height=None, *, ct=1000, xlim=(-2.0, 1.0), ylim=(-1.5, 1.5),
+               block_h=128, block_w=128, interpret=None):
+    """Escape-iteration counts (height, width) int32 via the Pallas kernel."""
+    return mandelbrot_counts_pallas(
+        width, height, ct=ct, xlim=xlim, ylim=ylim,
+        block_h=block_h, block_w=block_w, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("width", "height", "ct", "xlim", "ylim"))
+def mandelbrot_ref(width, height=None, *, ct=1000, xlim=(-2.0, 1.0), ylim=(-1.5, 1.5)):
+    return mandelbrot_counts_ref(width, height, ct=ct, xlim=xlim, ylim=ylim)

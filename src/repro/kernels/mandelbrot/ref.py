@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the Mandelbrot escape-time kernel (paper Algorithm 2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mandelbrot_counts_ref(
+    width: int,
+    height: int | None = None,
+    *,
+    ct: int = 1000,
+    xlim=(-2.0, 1.0),
+    ylim=(-1.5, 1.5),
+):
+    """Reference escape counts, (height, width) int32, float32 arithmetic.
+
+    Identical update rule to the kernel: count an iteration while active,
+    then retire pixels with |z|^2 >= 4 (z <- z^4 + c, the paper's variant).
+    """
+    height = width if height is None else height
+    dx = (xlim[1] - xlim[0]) / max(width - 1, 1)
+    dy = (ylim[1] - ylim[0]) / max(height - 1, 1)
+    cr = (xlim[0] + jnp.arange(width, dtype=jnp.float32) * dx)[None, :]
+    ci = (ylim[0] + jnp.arange(height, dtype=jnp.float32) * dy)[:, None]
+    cr = jnp.broadcast_to(cr, (height, width))
+    ci = jnp.broadcast_to(ci, (height, width))
+
+    def body(_, carry):
+        zr, zi, cnt, active = carry
+        zr2 = zr * zr - zi * zi
+        zi2 = 2.0 * zr * zi
+        zr4 = zr2 * zr2 - zi2 * zi2
+        zi4 = 2.0 * zr2 * zi2
+        nzr = zr4 + cr
+        nzi = zi4 + ci
+        mag2 = nzr * nzr + nzi * nzi
+        cnt = cnt + active.astype(jnp.int32)
+        still = active & (mag2 < 4.0)
+        zr = jnp.where(active, nzr, zr)
+        zi = jnp.where(active, nzi, zi)
+        return zr, zi, cnt, still
+
+    zeros = jnp.zeros((height, width), jnp.float32)
+    init = (zeros, zeros, jnp.zeros((height, width), jnp.int32),
+            jnp.ones((height, width), jnp.bool_))
+    _, _, cnt, _ = jax.lax.fori_loop(0, ct, body, init)
+    return cnt

@@ -1,0 +1,141 @@
+"""Pallas TPU kernel for PSIA spin-image generation (paper Algorithm 1).
+
+The paper's first application converts a 3D point cloud into M spin-images:
+for image center P_i (with normal n_i), every cloud point X_j is binned into
+a (W x W) histogram by its in-plane/out-of-plane distances (alpha/beta),
+gated by a support-angle test on the normals.
+
+GPU/CPU implementations scatter into ``tempSpinImage[k, l]++``.  TPUs have no
+efficient scatter; the TPU-native adaptation is **histogram-by-comparison**:
+with the paper's W = 5 there are only 25 bins, so we one-hot the (k*W + l)
+bin index of each (image, point) pair against a lane-aligned bin axis
+(padded to 128) and *sum over points* -- turning the scatter into a dense
+masked reduction the VPU executes at full width.
+
+Grid: (image blocks, point blocks), point axis innermost; the per-image
+histogram accumulates in a VMEM scratch across point blocks and is written
+out on the last one.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128  # padded bin axis (>= W*W)
+
+
+def _spin_image_kernel(
+    centers_ref,  # (BM, 3)   image-center points
+    cnormals_ref,  # (BM, 3)   their normals
+    points_ref,  # (BP, 3)   cloud points
+    pnormals_ref,  # (BP, 3)   cloud normals
+    out_ref,  # (BM, LANES) histogram (padded)
+    acc_ref,  # scratch (BM, LANES) f32
+    *,
+    img_width: int,
+    bin_size: float,
+    cos_support: float,
+    n_points: int,
+    n_images: int,
+    block_m: int,
+    block_p: int,
+):
+    mi = pl.program_id(0)
+    pj = pl.program_id(1)
+    n_pblocks = pl.num_programs(1)
+
+    @pl.when(pj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    P = centers_ref[...].astype(jnp.float32)  # (BM, 3)
+    nP = cnormals_ref[...].astype(jnp.float32)  # (BM, 3)
+    X = points_ref[...].astype(jnp.float32)  # (BP, 3)
+    nX = pnormals_ref[...].astype(jnp.float32)  # (BP, 3)
+
+    # pairwise geometry: diff (BM, BP, 3)
+    diff = X[None, :, :] - P[:, None, :]
+    beta = jnp.sum(nP[:, None, :] * diff, axis=-1)  # (BM, BP) out-of-plane
+    r2 = jnp.sum(diff * diff, axis=-1)  # (BM, BP)
+    alpha = jnp.sqrt(jnp.maximum(r2 - beta * beta, 0.0))  # in-plane
+    cos_ang = jnp.sum(nP[:, None, :] * nX[None, :, :], axis=-1)
+
+    k = jnp.ceil((img_width / 2.0 - beta) / bin_size).astype(jnp.int32)
+    l = jnp.ceil(alpha / bin_size).astype(jnp.int32)
+
+    m_idx = mi * block_m + jax.lax.broadcasted_iota(jnp.int32, (block_m, block_p), 0)
+    p_idx = pj * block_p + jax.lax.broadcasted_iota(jnp.int32, (block_m, block_p), 1)
+    valid = (
+        (cos_ang >= cos_support)
+        & (k >= 0) & (k < img_width)
+        & (l >= 0) & (l < img_width)
+        & (m_idx < n_images) & (p_idx < n_points)
+    )
+    bins = jnp.where(valid, k * img_width + l, -1)  # -1 never matches a lane
+
+    # histogram-by-comparison: (BM, BP, LANES) one-hot summed over points
+    lane = jax.lax.broadcasted_iota(jnp.int32, (block_m, block_p, LANES), 2)
+    onehot = (bins[:, :, None] == lane).astype(jnp.float32)
+    acc_ref[...] += jnp.sum(onehot, axis=1)
+
+    @pl.when(pj == n_pblocks - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(jnp.int32)
+
+
+def spin_images_pallas(
+    points,  # (N, 3) float
+    normals,  # (N, 3) float unit normals
+    n_images: int,  # first n_images points are the image centers (paper: M)
+    *,
+    img_width: int = 5,
+    bin_size: float = 0.01,
+    support_angle: float = 2.0,  # radians; paper uses 2
+    block_m: int = 8,
+    block_p: int = 128,
+    interpret: bool | None = None,
+):
+    """Spin images for the first ``n_images`` points; (n_images, W, W) int32."""
+    import math
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n_points = points.shape[0]
+    gm = -(-n_images // block_m)
+    gp = -(-n_points // block_p)
+    mp, pp = gm * block_m, gp * block_p
+
+    pad_pts = jnp.pad(points.astype(jnp.float32), ((0, pp - n_points), (0, 0)))
+    pad_nrm = jnp.pad(normals.astype(jnp.float32), ((0, pp - n_points), (0, 0)))
+    centers = jnp.pad(points[:n_images].astype(jnp.float32), ((0, mp - n_images), (0, 0)))
+    cnorms = jnp.pad(normals[:n_images].astype(jnp.float32), ((0, mp - n_images), (0, 0)))
+
+    kern = functools.partial(
+        _spin_image_kernel,
+        img_width=img_width,
+        bin_size=float(bin_size),
+        cos_support=float(math.cos(support_angle)),
+        n_points=n_points,
+        n_images=n_images,
+        block_m=block_m,
+        block_p=block_p,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(gm, gp),
+        in_specs=[
+            pl.BlockSpec((block_m, 3), lambda mi, pj: (mi, 0)),
+            pl.BlockSpec((block_m, 3), lambda mi, pj: (mi, 0)),
+            pl.BlockSpec((block_p, 3), lambda mi, pj: (pj, 0)),
+            pl.BlockSpec((block_p, 3), lambda mi, pj: (pj, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, LANES), lambda mi, pj: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, LANES), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_m, LANES), jnp.float32)],
+        interpret=interpret,
+    )(centers, cnorms, pad_pts, pad_nrm)
+    return out[:n_images, : img_width * img_width].reshape(n_images, img_width, img_width)

@@ -1,0 +1,32 @@
+"""Jitted public entry points for the spin-image kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import spin_images_pallas
+from .ref import spin_images_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_images", "img_width", "bin_size", "support_angle",
+                     "block_m", "block_p", "interpret"),
+)
+def spin_images(points, normals, n_images, *, img_width=5, bin_size=0.01,
+                support_angle=2.0, block_m=8, block_p=128, interpret=None):
+    return spin_images_pallas(
+        points, normals, n_images, img_width=img_width, bin_size=bin_size,
+        support_angle=support_angle, block_m=block_m, block_p=block_p,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_images", "img_width", "bin_size", "support_angle")
+)
+def spin_images_oracle(points, normals, n_images, *, img_width=5, bin_size=0.01,
+                       support_angle=2.0):
+    return spin_images_ref(points, normals, n_images, img_width=img_width,
+                           bin_size=bin_size, support_angle=support_angle)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for spin-image generation (paper Algorithm 1)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def spin_images_ref(
+    points,
+    normals,
+    n_images: int,
+    *,
+    img_width: int = 5,
+    bin_size: float = 0.01,
+    support_angle: float = 2.0,
+):
+    """Dense (n_images, W, W) histograms over all (image, point) pairs."""
+    pts = points.astype(jnp.float32)
+    nrm = normals.astype(jnp.float32)
+    P = pts[:n_images]  # (M, 3)
+    nP = nrm[:n_images]
+    diff = pts[None, :, :] - P[:, None, :]  # (M, N, 3)
+    beta = jnp.sum(nP[:, None, :] * diff, axis=-1)
+    r2 = jnp.sum(diff * diff, axis=-1)
+    alpha = jnp.sqrt(jnp.maximum(r2 - beta * beta, 0.0))
+    cos_ang = jnp.sum(nP[:, None, :] * nrm[None, :, :], axis=-1)
+    k = jnp.ceil((img_width / 2.0 - beta) / bin_size).astype(jnp.int32)
+    l = jnp.ceil(alpha / bin_size).astype(jnp.int32)
+    valid = (
+        (cos_ang >= math.cos(support_angle))
+        & (k >= 0) & (k < img_width)
+        & (l >= 0) & (l < img_width)
+    )
+    bins = jnp.where(valid, k * img_width + l, img_width * img_width)  # overflow bin
+    onehot = jnp.zeros((n_images, img_width * img_width + 1), jnp.int32)
+    # one-hot sum over points via comparison (same math as the kernel)
+    lane = jnp.arange(img_width * img_width + 1)[None, None, :]
+    onehot = jnp.sum((bins[:, :, None] == lane).astype(jnp.int32), axis=1)
+    return onehot[:, :-1].reshape(n_images, img_width, img_width)

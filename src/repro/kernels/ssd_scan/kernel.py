@@ -1,0 +1,128 @@
+"""Mamba2 SSD (state-space duality) chunked-scan Pallas TPU kernel.
+
+Computes the selective state-space recurrence
+
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * (B_t (x) x_t)
+    y_t = C_t . h_t
+
+in *chunks* of L steps (the SSD block decomposition, arXiv:2405.21060):
+within a chunk everything is dense matmuls (MXU work), and the only
+sequential dependency is the (S x Dh) inter-chunk state.
+
+TPU adaptation: TPU Pallas grids iterate **sequentially**, so the running
+state is carried in a VMEM scratch accumulator across the chunk axis of the
+grid -- no host loop, no HBM round-trip for the state.  Grid order is
+(batch, head, chunk) with chunk innermost; the scratch is re-zeroed at
+chunk == 0.
+
+Per chunk (L = 128 default, S = state dim, Dh = head dim):
+    la      = dt * A[h]                              (L,)  log-decays
+    acum    = cumsum(la)                             (L,)  inclusive
+    Y_intra = ((C B^T) o decay o tril) diag(dt) X    (L,L)@(L,Dh)  MXU
+    Y_inter = (C o exp(acum)) h_prev                 (L,S)@(S,Dh)  MXU
+    h_new   = exp(acum[-1]) h_prev
+              + (B o dt o exp(acum[-1]-acum))^T X    (S,L)@(L,Dh)  MXU
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, L, 1, Dh)
+    dt_ref,  # (1, L, 1)
+    a_ref,  # (1,)           A (log-decay rate) for this head
+    b_ref,  # (1, L, S)
+    c_ref,  # (1, L, S)
+    y_ref,  # (1, L, 1, Dh)
+    h_ref,  # scratch (S, Dh) f32  -- carried across chunks
+    *,
+    L: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (L, Dh)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (L,)
+    A = a_ref[0].astype(jnp.float32)  # scalar
+    B = b_ref[0].astype(jnp.float32)  # (L, S)
+    C = c_ref[0].astype(jnp.float32)  # (L, S)
+
+    la = dt * A  # (L,) log decay (A < 0)
+    acum = jnp.cumsum(la)  # inclusive prefix
+
+    # intra-chunk: W[i,j] = (C_i . B_j) exp(acum_i - acum_j) dt_j  for j <= i
+    G = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, L)
+    decay = jnp.exp(acum[:, None] - acum[None, :])
+    tril = (
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    )
+    W = jnp.where(tril, G * decay, 0.0) * dt[None, :]
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, Dh)
+
+    # inter-chunk: contribution of the carried state
+    h_prev = h_ref[...]
+    y += jax.lax.dot_general(C * jnp.exp(acum)[:, None], h_prev,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # state update
+    wB = B * (dt * jnp.exp(acum[-1] - acum))[:, None]  # (L, S)
+    h_ref[...] = jnp.exp(acum[-1]) * h_prev + jax.lax.dot_general(
+        wB, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (S, Dh)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(
+    x,  # (B, T, H, Dh)
+    dt,  # (B, T, H)     positive step sizes
+    A,  # (H,)           negative log-decay rates
+    Bm,  # (B, T, S)
+    Cm,  # (B, T, S)
+    *,
+    chunk: int = 128,
+    interpret: bool | None = None,
+):
+    """Chunked SSD scan; returns y (B, T, H, Dh) in x.dtype."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    Bsz, T, H, Dh = x.shape
+    S = Bm.shape[-1]
+    nc = -(-T // chunk)
+    Tp = nc * chunk
+    # dt=0 padding is exact: decay exp(0)=1, no input contribution.
+    xp = jnp.pad(x, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    dtp = jnp.pad(dt, ((0, 0), (0, Tp - T), (0, 0)))
+    Bp = jnp.pad(Bm, ((0, 0), (0, Tp - T), (0, 0)))
+    Cp = jnp.pad(Cm, ((0, 0), (0, Tp - T), (0, 0)))
+
+    kern = functools.partial(_ssd_kernel, L=chunk)
+    out = pl.pallas_call(
+        kern,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, Dh), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, S), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, S), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, Dh), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, Tp, H, Dh), x.dtype),
+        scratch_shapes=[pltpu.VMEM((S, Dh), jnp.float32)],
+        interpret=interpret,
+    )(xp, dtp, A, Bp, Cp)
+    return out[:, :T]

@@ -1,0 +1,20 @@
+"""Jitted public entry points for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_scan_pallas
+from .ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
+    """Chunked Mamba2 SSD scan (Pallas).  Returns y (B,T,H,Dh)."""
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+@jax.jit
+def ssd_scan_oracle(x, dt, A, Bm, Cm):
+    return ssd_scan_ref(x, dt, A, Bm, Cm)

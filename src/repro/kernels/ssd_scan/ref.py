@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for the SSD scan.
+
+``ssd_scan_ref``          -- the naive sequential recurrence (ground truth;
+                             O(T) scan steps, state round-trips HBM per step).
+``ssd_scan_chunked_xla``  -- the SSD *block decomposition* in pure XLA: the
+                             same math as the Pallas kernel (chunk-local
+                             matmuls + one inter-chunk state carry), which is
+                             the production train/prefill path off-TPU.  The
+                             chunk body is ``jax.checkpoint``-ed so backward
+                             recomputes the (L, L) decay products instead of
+                             saving them (O(T * L * H) would otherwise leak
+                             into residuals).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Sequential scan over T. x (B,T,H,Dh), dt (B,T,H), A (H,), Bm/Cm (B,T,S).
+
+        h_t = exp(dt_t A_h) h_{t-1} + dt_t (B_t (x) x_t);   y_t = C_t . h_t
+    """
+    Bsz, T, H, Dh = x.shape
+    S = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,Dh), (B,H), (B,S), (B,S)
+        decay = jnp.exp(dt_t * A[None, :])  # (B,H)
+        inject = (
+            dt_t[:, :, None, None]
+            * b_t[:, None, :, None]
+            * x_t[:, :, None, :]
+        )  # (B,H,S,Dh)
+        h = decay[:, :, None, None] * h + inject
+        y_t = jnp.einsum("bs,bhsd->bhd", c_t, h)
+        return h, y_t
+
+    h0 = jnp.zeros((Bsz, H, S, Dh), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Cm.astype(jnp.float32), 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,T,H,Dh)
+
+
+def ssd_scan_chunked_xla(x, dt, A, Bm, Cm, *, chunk: int = 128):
+    """Chunked SSD in pure jnp.  Same signature/semantics as ``ssd_scan_ref``.
+
+    Returns (y (B,T,H,Dh) in x.dtype, final_state (B,H,S,Dh) f32).
+    """
+    Bsz, T, H, P = x.shape
+    S = Bm.shape[-1]
+    nc = -(-T // chunk)
+    Tp = nc * chunk
+    # dt=0 padding is exact: decay exp(0)=1, zero input contribution
+    xp = jnp.pad(x, ((0, 0), (0, Tp - T), (0, 0), (0, 0))).astype(jnp.float32)
+    dtp = jnp.pad(dt, ((0, 0), (0, Tp - T), (0, 0))).astype(jnp.float32)
+    Bp = jnp.pad(Bm, ((0, 0), (0, Tp - T), (0, 0))).astype(jnp.float32)
+    Cp = jnp.pad(Cm, ((0, 0), (0, Tp - T), (0, 0))).astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    xs = jnp.moveaxis(xp.reshape(Bsz, nc, chunk, H, P), 1, 0)
+    dts = jnp.moveaxis(dtp.reshape(Bsz, nc, chunk, H), 1, 0)
+    Bs = jnp.moveaxis(Bp.reshape(Bsz, nc, chunk, S), 1, 0)
+    Cs = jnp.moveaxis(Cp.reshape(Bsz, nc, chunk, S), 1, 0)
+    tril = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+
+    @jax.checkpoint
+    def step(h, inp):
+        xc, dtc, bc, cc = inp  # (B,L,H,P), (B,L,H), (B,L,S), (B,L,S)
+        la = dtc * Af[None, None, :]          # (B,L,H) log decays (<= 0)
+        acum = jnp.cumsum(la, axis=1)          # inclusive prefix
+        G = jnp.einsum("bis,bjs->bij", cc, bc)  # (B,L,L)
+        # mask the *exponent*: the upper triangle has positive exponents that
+        # overflow to inf, and inf*0 in the VJP of a post-hoc where is NaN
+        diff = acum[:, :, None, :] - acum[:, None, :, :]  # (B,L,L,H)
+        diff = jnp.where(tril[None, :, :, None], diff, -jnp.inf)
+        W = G[..., None] * jnp.exp(diff) * dtc[:, None, :, :]  # dt_j
+        y = jnp.einsum("bijh,bjhp->bihp", W, xc)
+        y = y + jnp.einsum("bis,bih,bhsp->bihp", cc, jnp.exp(acum), h)
+        w_state = dtc * jnp.exp(acum[:, -1:, :] - acum)  # (B,L,H)
+        h = (jnp.exp(acum[:, -1])[:, :, None, None] * h
+             + jnp.einsum("bjs,bjh,bjhp->bhsp", bc, w_state, xc))
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, S, P), jnp.float32)
+    h, ys = jax.lax.scan(step, h0, (xs, dts, Bs, Cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, Tp, H, P)[:, :T]
+    return y.astype(x.dtype), h

@@ -1,0 +1,363 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first two lines: jax locks the device count on first init.
+# (--devices N below rewrites the flag, still before any jax import.)
+import sys  # noqa: E402
+
+if "--devices" in sys.argv:
+    _n = sys.argv[sys.argv.index("--devices") + 1]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces (and stores under experiments/dryrun/):
+  * compiled.memory_analysis()  -- proves the program fits per-device HBM
+  * compiled.cost_analysis()    -- HLO FLOPs / bytes for the roofline
+  * the collective inventory parsed from the post-SPMD HLO text
+    (op type, result shape, group size, modeled bytes moved per device)
+
+Roofline terms themselves are derived in benchmarks/roofline.py from these
+JSONs (hardware constants live there).
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --arch mamba2-370m --shape long_500k \
+      --devices 8   # scaled-down mesh for CI
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, applicable_shapes, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh, make_test_mesh  # noqa: E402
+from repro.models import api  # noqa: E402
+from repro.models.layers import dtype_of  # noqa: E402
+from repro.optim import AdamWConfig, adamw  # noqa: E402
+from repro.shard import (  # noqa: E402
+    batch_pspecs_for_mesh,
+    cache_pspecs,
+    make_ctx,
+    params_pspecs,
+    shardings_for,
+)
+from repro.train.step import make_train_step  # noqa: E402
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg, shape_name: str, *, batch_override=None):
+    """Batch pytree of SDS for one cell.  See DESIGN.md for enc-dec/vlm
+    conventions (src len == seq for train/prefill; 4096 for decode)."""
+    sh = SHAPES[shape_name]
+    B = batch_override or sh["global_batch"]
+    T = sh["seq_len"]
+    dt = dtype_of(cfg.dtype)
+    if sh["kind"] == "train":
+        if cfg.is_encdec:
+            return {"tokens": SDS((B, T), jnp.int32),
+                    "src_embeds": SDS((B, T, cfg.d_model), dt)}
+        if cfg.frontend == "vision":
+            return {"tokens": SDS((B, T - cfg.n_prefix_tokens), jnp.int32),
+                    "prefix_embeds": SDS((B, cfg.n_prefix_tokens, cfg.d_model), dt)}
+        return {"tokens": SDS((B, T), jnp.int32)}
+    if sh["kind"] == "prefill":
+        if cfg.is_encdec:
+            return {"tokens": SDS((B, T), jnp.int32),
+                    "src_embeds": SDS((B, T, cfg.d_model), dt)}
+        if cfg.frontend == "vision":
+            return {"tokens": SDS((B, T - cfg.n_prefix_tokens), jnp.int32),
+                    "prefix_embeds": SDS((B, cfg.n_prefix_tokens, cfg.d_model), dt)}
+        return {"tokens": SDS((B, T), jnp.int32)}
+    if sh["kind"] == "decode":
+        return {"token": SDS((B,), jnp.int32)}
+    raise ValueError(shape_name)
+
+
+def cache_specs(cfg, shape_name: str, *, batch_override=None):
+    sh = SHAPES[shape_name]
+    B = batch_override or sh["global_batch"]
+    T = sh["seq_len"]
+    src = 4096 if cfg.is_encdec and sh["kind"] == "decode" else T
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, B, T, src_len=src if cfg.is_encdec else None))
+
+
+def default_microbatches(cfg, shape_name, mesh, batch_override=None) -> int:
+    """Enough grad-accumulation that one microbatch is ~1 seq per data shard."""
+    if SHAPES[shape_name]["kind"] != "train":
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    B = batch_override or SHAPES[shape_name]["global_batch"]
+    per_shard = max(B // dp, 1)
+    if cfg.d_model >= 4096 or cfg.n_layers >= 48:
+        return per_shard  # 1 seq per shard per microbatch
+    return max(per_shard // 4, 1)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def _divisible_batch_axes(mesh, B):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    use, rem = [], B
+    for a in ("pod", "data"):
+        if a in sizes and rem % sizes[a] == 0:
+            use.append(a)
+            rem //= sizes[a]
+    return tuple(use) if len(use) > 1 else (use[0] if use else None)
+
+
+def _logits_sharding(mesh, B, vocab):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = "model" if vocab % sizes.get("model", 1) == 0 else None
+    return NamedSharding(mesh, P(_divisible_batch_axes(mesh, B), model))
+
+
+def default_remat(cfg):
+    """Per-family activation policy (tuned in EXPERIMENTS.md §Perf):
+    grouped recursive checkpointing for DEEP dense stacks (8x fewer
+    layer-input saves, ~+6% flops); plain full remat for shallow dense
+    models (the group's live recompute set exceeds what it saves --
+    measured +9 GiB on the 24-layer danube), for MoE (group recompute
+    re-runs the dispatch all-to-alls -- measured 2x collectives) and for
+    SSM/hybrid (their saves are small)."""
+    if cfg.family in ("dense", "vlm") and cfg.n_layers >= 40:
+        return "group:8"
+    return "full"
+
+
+def build_cell(cfg, shape_name, mesh, *, microbatches=None, remat=None,
+               logits_f32=True, batch_override=None, lean=True):
+    remat = remat or default_remat(cfg)
+    """Returns (fn, example_args_SDS, in_shardings, out_shardings, donate)."""
+    ctx = make_ctx(mesh)
+    sh = SHAPES[shape_name]
+    params_sds = api.abstract_params(cfg)
+    p_shard = shardings_for(params_sds, params_pspecs(params_sds), mesh)
+
+    if sh["kind"] == "train":
+        mb = microbatches or default_microbatches(cfg, shape_name, mesh,
+                                                  batch_override)
+        ocfg = AdamWConfig(state_dtype="bfloat16" if lean else "float32")
+        opt_sds = jax.eval_shape(lambda p: adamw.init_for(ocfg, p), params_sds)
+        opt_shard = shardings_for(opt_sds, params_pspecs(opt_sds), mesh)
+        batch_sds = input_specs(cfg, shape_name, batch_override=batch_override)
+        b_shard = shardings_for(batch_sds, batch_pspecs_for_mesh(batch_sds, mesh), mesh)
+        step = make_train_step(
+            cfg, ocfg, ctx=ctx, microbatches=mb, remat=remat,
+            acc_dtype=jnp.bfloat16 if lean else jnp.float32)
+        in_sh = (p_shard, opt_shard, b_shard)
+        out_sh = (p_shard, opt_shard,
+                  jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                               {"grad_norm": 0, "lr": 0, "loss": 0}))
+        args = (params_sds, opt_sds, batch_sds)
+        return step, args, in_sh, out_sh, (0, 1), {"microbatches": mb}
+
+    if sh["kind"] == "prefill":
+        batch_sds = input_specs(cfg, shape_name, batch_override=batch_override)
+        cache_sds = cache_specs(cfg, shape_name, batch_override=batch_override)
+        b_shard = shardings_for(batch_sds, batch_pspecs_for_mesh(batch_sds, mesh), mesh)
+        c_pspec = cache_pspecs(cache_sds, mesh, kv_heads=cfg.n_kv_heads or None)
+        c_shard = shardings_for(cache_sds, c_pspec, mesh)
+        logits_shard = _logits_sharding(mesh, batch_sds["tokens"].shape[0], cfg.vocab)
+
+        def fn(params, batch, cache):
+            return api.prefill(params, cfg, batch, cache, ctx=ctx)
+
+        return (fn, (params_sds, batch_sds, cache_sds),
+                (p_shard, b_shard, c_shard), (logits_shard, c_shard), (2,), {})
+
+    # decode
+    batch_sds = input_specs(cfg, shape_name, batch_override=batch_override)
+    cache_sds = cache_specs(cfg, shape_name, batch_override=batch_override)
+    tok_shard = shardings_for(
+        batch_sds, batch_pspecs_for_mesh(batch_sds, mesh), mesh)["token"]
+    c_pspec = cache_pspecs(cache_sds, mesh, kv_heads=cfg.n_kv_heads or None)
+    c_shard = shardings_for(cache_sds, c_pspec, mesh)
+    logits_shard = _logits_sharding(mesh, batch_sds["token"].shape[0], cfg.vocab)
+
+    def fn(params, token, cache):
+        return api.decode_step(params, cfg, token, cache, ctx=ctx)
+
+    return (fn, (params_sds, batch_sds["token"], cache_sds),
+            (p_shard, tok_shard, c_shard), (logits_shard, c_shard), (2,), {})
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, devices=None,
+             microbatches=None, remat=None, out_dir="experiments/dryrun",
+             batch_override=None, tag="", baseline=False, lean=True):
+    if baseline:
+        # paper-faithful first implementation: dense attention, sequential
+        # SSD scan, f32 optimizer states, plain full remat
+        import repro.models.layers as _L
+        import repro.models.ssm as _S
+
+        _L.CHUNKED_ATTN_THRESHOLD = 1 << 60
+        _S.SSD_MODE = "sequential"
+        lean = False
+        remat = remat or "full"
+
+    cfg = get_config(arch)
+    if shape_name not in applicable_shapes(cfg):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped",
+               "reason": "quadratic attention at 500k (see DESIGN.md)",
+               "tag": tag}
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        with open(os.path.join(
+                out_dir, f"{arch}_{shape_name}_{mesh_kind}{suffix}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    multi = mesh_kind == "multipod"
+    if devices:
+        mesh = make_test_mesh(int(devices), multi_pod=multi)
+    else:
+        mesh = make_production_mesh(multi_pod=multi)
+
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": dict(zip(mesh.axis_names, mesh.devices.shape)),
+           "remat": remat or default_remat(get_config(arch)),
+           "lean": lean, "tag": tag, "baseline": baseline}
+    try:
+        fn, args, in_sh, out_sh, donate, extra = build_cell(
+            cfg, shape_name, mesh, microbatches=microbatches, remat=remat,
+            batch_override=batch_override, lean=lean)
+        rec.update(extra)
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        # trip-count-aware analysis of the post-SPMD module (XLA's own
+        # cost_analysis counts while bodies once -- useless under scan)
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        hlo_text = compiled.as_text()
+        hlo = analyze_hlo(hlo_text)
+        # persist the (gzipped) HLO so analyzer iterations don't recompile
+        import gzip
+
+        hlo_dir = os.path.join(os.path.dirname(out_dir.rstrip("/")) or ".",
+                               "hlo")
+        os.makedirs(hlo_dir, exist_ok=True)
+        _sfx = f"_{tag}" if tag else ""
+        with gzip.open(os.path.join(
+                hlo_dir, f"{arch}_{shape_name}_{mesh_kind}{_sfx}.txt.gz"),
+                "wt") as zf:
+            zf.write(hlo_text)
+        n_chips = mesh.devices.size
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=dict(
+                argument_bytes=ma.argument_size_in_bytes,
+                output_bytes=ma.output_size_in_bytes,
+                temp_bytes=ma.temp_size_in_bytes,
+                alias_bytes=ma.alias_size_in_bytes,
+                peak_bytes=ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+            ),
+            cost=dict(
+                flops=hlo["flops"],  # per-device, trip-adjusted, dot ops
+                bytes_accessed=hlo["traffic_bytes"],  # fusion-boundary model
+                xla_flops_raw=ca.get("flops", 0.0),  # XLA's (loop-body-once)
+                xla_bytes_raw=ca.get("bytes accessed", 0.0),
+            ),
+            collectives=hlo["collectives"],
+            collective_moved_bytes=hlo["collective_moved_bytes"],
+            top_flops=hlo["top_flops"],
+            top_traffic=hlo["top_traffic"],
+            n_chips=n_chips,
+            model_params=cfg.param_count(),
+            active_params=cfg.active_param_count(),
+        )
+    except Exception as e:  # noqa: BLE001 -- a failed cell is a bug to record
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_kind}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--devices", default=None, help="override 512-dev mesh (CI)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--batch", type=int, default=None, help="override global batch")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="", help="suffix for perf-iteration runs")
+    ap.add_argument("--baseline", action="store_true",
+                    help="paper-faithful baseline paths (dense attn, seq SSD)")
+    ap.add_argument("--lean", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="bf16 optimizer states + bf16 grad accumulator")
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in sorted(ARCHS) for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            rec = run_cell(arch, shape, mk, devices=args.devices,
+                           microbatches=args.microbatches, remat=args.remat,
+                           out_dir=args.out, batch_override=args.batch,
+                           tag=args.tag, baseline=args.baseline,
+                           lean=args.lean)
+            status = rec["status"]
+            line = f"[dryrun] {arch:25s} {shape:12s} {mk:8s} {status}"
+            if status == "ok":
+                mem = rec["memory"]["peak_bytes"] / 2**30
+                line += (f" peak={mem:.2f}GiB/dev flops={rec['cost']['flops']:.3e} "
+                         f"coll={rec['collective_moved_bytes']/2**30:.2f}GiB "
+                         f"compile={rec['compile_s']}s")
+            elif status == "error":
+                line += f" {rec['error'][:120]}"
+                failures += 1
+            print(line, flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Composable LM stack (dense / MoE / SWA / enc-dec / SSM / hybrid / stubs)."""
+from . import api, encdec, layers, lm, ssm  # noqa: F401

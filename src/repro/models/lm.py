@@ -1,0 +1,351 @@
+"""Unified decoder-only LM covering the dense / MoE / SWA / SSM / hybrid /
+VLM-prefix families, with scan-over-layers (small HLO => fast 512-device
+compiles) and configurable remat.
+
+Entry points:
+  init_params(key, cfg)                 -> params pytree (stacked layer leaves)
+  forward(params, cfg, tokens, ...)     -> logits (train / teacher-forced)
+  init_cache(cfg, batch, max_len, ...)  -> decode cache pytree
+  prefill(params, cfg, tokens, cache)   -> (last-token logits, cache)
+  decode_step(params, cfg, token, cache)-> (logits, cache)
+
+Hybrid (zamba2-style) layout: the mamba backbone is scanned in groups of
+``attn_every`` layers; ONE shared transformer block (attention + MLP) runs
+after each group, its weights reused across all groups (its KV caches are
+per-group).  This keeps the whole stack inside two nested scans -- no
+per-layer Python unrolling anywhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.shard.spec import NO_SHARD, ShardCtx, cs
+
+from . import layers as L
+from . import ssm as SSM
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg, dtype):
+    """One repeated-stack layer for the arch family."""
+    ks = jax.random.split(key, 4)
+    if cfg.family in ("dense", "vlm"):
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model, dtype),
+            "attn": L.attention_init(ks[0], cfg, dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+        }
+    if cfg.family == "moe":
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model, dtype),
+            "attn": L.attention_init(ks[0], cfg, dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+            "moe": L.moe_init(ks[1], cfg, dtype),
+        }
+    if cfg.family in ("ssm", "hybrid"):
+        return {
+            "ln": L.rmsnorm_init(cfg.d_model, dtype),
+            "ssm": SSM.ssm_init(ks[0], cfg, dtype),
+        }
+    raise ValueError(cfg.family)
+
+
+def shared_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.attention_init(ks[0], cfg, dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(key, cfg):
+    dtype = L.dtype_of(cfg.dtype)
+    k_emb, k_layers, k_shared, k_head = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    params = {
+        "embed": L.dense_init(k_emb, (cfg.vocab, cfg.d_model), scale=1.0, dtype=dtype),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg, dtype))(layer_keys),
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab), dtype=dtype)
+    if cfg.family == "hybrid":
+        assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0, (
+            "hybrid stack must be divisible into attn_every-sized groups"
+        )
+        params["shared"] = shared_block_init(k_shared, cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _tblock(p, h, cfg, ctx, *, positions, causal, kv=None, pos=None, backend):
+    """Transformer block: attn + (mlp | moe) with pre-norms and residuals."""
+    a, new_kv = L.attention_block(
+        p["attn"], L.rmsnorm(h, p["ln1"], cfg.norm_eps), cfg, ctx=ctx,
+        positions=positions, causal=causal, kv_cache=kv, cache_pos=pos,
+        backend=backend,
+    )
+    h = h + a
+    hn = L.rmsnorm(h, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        h = h + L.moe_block(p["moe"], hn, cfg, ctx=ctx)
+    else:
+        h = h + L.mlp_block(p["mlp"], hn, ctx=ctx)
+    return h, new_kv
+
+
+def _ssm_layer(p, h, cfg, ctx, *, cache=None, backend):
+    o, new_cache = SSM.ssm_block(
+        p["ssm"], L.rmsnorm(h, p["ln"], cfg.norm_eps), cfg, ctx=ctx,
+        cache=cache, backend=backend,
+    )
+    return h + o, new_cache
+
+
+def _remat(fn, policy: str):
+    if policy == "none" or policy.startswith("group"):
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    raise ValueError(policy)
+
+
+def _scan_layers(body, h, stacked, remat: str):
+    """Scan the layer stack under the remat policy.
+
+    ``group:G`` = recursive checkpointing: only every G-th layer input is
+    saved; the backward re-runs one group at a time (activation saves drop
+    G-fold for ~one extra forward of recompute within the live group).
+    """
+    if remat.startswith("group"):
+        G = int(remat.split(":")[1]) if ":" in remat else 8
+        L = jax.tree.leaves(stacked)[0].shape[0]
+        while L % G:
+            G -= 1
+        grouped = jax.tree.map(
+            lambda a: a.reshape((L // G, G) + a.shape[1:]), stacked)
+
+        @jax.checkpoint
+        def group_body(carry, gp):
+            out, _ = jax.lax.scan(body, carry, gp)
+            return out, None
+
+        h, _ = jax.lax.scan(group_body, h, grouped)
+        return h
+    h, _ = jax.lax.scan(_remat(body, remat), h, stacked)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# forward (train / teacher-forced full sequence)
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params,
+    cfg,
+    tokens,  # (B, T) int32
+    *,
+    ctx: ShardCtx = NO_SHARD,
+    prefix_embeds=None,  # (B, Tp, d) vlm/audio stub frontend output
+    backend: str = "xla",
+    remat: str = "none",
+    logits_f32: bool = True,
+):
+    """Token logits (B, T(+Tp), vocab)."""
+    h = params["embed"][tokens]
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    B, T, _ = h.shape
+    h = cs(h, "batch", None, None, ctx=ctx)
+    positions = jnp.arange(T)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+
+        def body(carry, lp):
+            out, _ = _tblock(lp, carry, cfg, ctx, positions=positions,
+                             causal=True, backend=backend)
+            return out, None
+
+        h = _scan_layers(body, h, params["layers"], remat)
+
+    elif cfg.family == "ssm":
+
+        def body(carry, lp):
+            out, _ = _ssm_layer(lp, carry, cfg, ctx, backend=backend)
+            return out, None
+
+        h = _scan_layers(body, h, params["layers"], remat)
+
+    elif cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, cfg.attn_every) + a.shape[1:]), params["layers"]
+        )
+        shared = params["shared"]
+
+        def inner(carry, lp):
+            out, _ = _ssm_layer(lp, carry, cfg, ctx, backend=backend)
+            return out, None
+
+        def group(carry, gp):
+            out, _ = jax.lax.scan(_remat(inner, remat), carry, gp)
+            out, _ = _tblock(shared, out, cfg, ctx, positions=positions,
+                             causal=True, backend=backend)
+            return out, None
+
+        h, _ = jax.lax.scan(group, h, grouped)
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    logits = cs(logits, "batch", None, "model", ctx=ctx)
+    return logits.astype(jnp.float32) if logits_f32 else logits
+
+
+# ---------------------------------------------------------------------------
+# decode cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, max_len, dtype=None):
+    """Stacked per-layer caches + a global position counter."""
+    dt = L.dtype_of(cfg.dtype) if dtype is None else dtype
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "vlm", "moe"):
+        kv_len = min(max_len, cfg.window) if cfg.window else max_len
+        shape = (cfg.n_layers, batch, kv_len, cfg.n_kv_heads, cfg.hd)
+        cache["kv"] = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    elif cfg.family in ("ssm", "hybrid"):
+        cache["ssm"] = {
+            "state": jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                jnp.float32,
+            ),
+            "conv": jnp.zeros(
+                (cfg.n_layers, batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                dt,
+            ),
+        }
+        if cfg.family == "hybrid":
+            G = cfg.n_layers // cfg.attn_every
+            shape = (G, batch, max_len, cfg.n_kv_heads, cfg.hd)
+            cache["kv"] = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    return cache
+
+
+# NOTE on SWA caches: for cfg.window we still allocate min(max_len, window)
+# slots and address them linearly (no ring buffer) -- decode positions past
+# the window reuse dynamic_update at pos % window via the mask; see
+# _swa_cache_pos below.
+
+
+def _step(params, cfg, h, cache, *, ctx, positions, backend):
+    """One full pass over the stack with caches; h (B, T, d)."""
+    pos = cache["pos"]
+
+    if cfg.family in ("dense", "vlm", "moe"):
+
+        def body(carry, xs):
+            lp, kv = xs
+            out, new_kv = _tblock(lp, carry, cfg, ctx, positions=positions,
+                                  causal=True, kv=kv, pos=pos, backend=backend)
+            return out, new_kv
+
+        h, new_kv = jax.lax.scan(body, h, (params["layers"], cache["kv"]))
+        new_cache = {"pos": pos + h.shape[1], "kv": new_kv}
+
+    elif cfg.family == "ssm":
+
+        def body(carry, xs):
+            lp, c = xs
+            out, nc = _ssm_layer(lp, carry, cfg, ctx, cache=c, backend=backend)
+            return out, nc
+
+        h, new_ssm = jax.lax.scan(body, h, (params["layers"], cache["ssm"]))
+        new_cache = {"pos": pos + h.shape[1], "ssm": new_ssm}
+
+    elif cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, cfg.attn_every) + a.shape[1:]), params["layers"]
+        )
+        gssm = jax.tree.map(
+            lambda a: a.reshape((G, cfg.attn_every) + a.shape[1:]), cache["ssm"]
+        )
+        shared = params["shared"]
+
+        def inner(carry, xs):
+            lp, c = xs
+            out, nc = _ssm_layer(lp, carry, cfg, ctx, cache=c, backend=backend)
+            return out, nc
+
+        def group(carry, xs):
+            gp, gc, kv = xs
+            out, ncs = jax.lax.scan(inner, carry, (gp, gc))
+            out, nkv = _tblock(shared, out, cfg, ctx, positions=positions,
+                               causal=True, kv=kv, pos=pos, backend=backend)
+            return out, (ncs, nkv)
+
+        h, (new_ssm, new_kv) = jax.lax.scan(group, h, (grouped, gssm, cache["kv"]))
+        new_ssm = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_ssm
+        )
+        new_cache = {"pos": pos + h.shape[1], "ssm": new_ssm, "kv": new_kv}
+    else:
+        raise ValueError(cfg.family)
+
+    return h, new_cache
+
+
+def prefill(
+    params, cfg, tokens, cache, *, ctx: ShardCtx = NO_SHARD,
+    prefix_embeds=None, backend: str = "xla",
+):
+    """Consume the prompt; returns (last-position logits (B, vocab), cache)."""
+    h = params["embed"][tokens]
+    if prefix_embeds is not None:
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    h = cs(h, "batch", None, None, ctx=ctx)
+    positions = cache["pos"] + jnp.arange(h.shape[1])
+    h, cache = _step(params, cfg, h, cache, ctx=ctx, positions=positions,
+                     backend=backend)
+    h = L.rmsnorm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ head)[:, 0].astype(jnp.float32), cache
+
+
+def decode_step(
+    params, cfg, token, cache, *, ctx: ShardCtx = NO_SHARD, backend: str = "xla"
+):
+    """One new token (B,) or (B,1); returns (logits (B, vocab), cache)."""
+    if token.ndim == 1:
+        token = token[:, None]
+    h = params["embed"][token]
+    h = cs(h, "batch", None, None, ctx=ctx)
+    positions = cache["pos"] + jnp.arange(1)
+    h, cache = _step(params, cfg, h, cache, ctx=ctx, positions=positions,
+                     backend=backend)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ head)[:, 0].astype(jnp.float32), cache

@@ -1,0 +1,156 @@
+"""Mamba2 (SSD) block: projections, short conv, selective scan, gated norm.
+
+Train/prefill use the chunked SSD algorithm (the Pallas kernel on TPU, its
+jnp oracle elsewhere); decode advances the recurrence one step against a
+carried (state, conv) cache -- constant memory/compute per token, which is
+why the SSM archs run the ``long_500k`` cell that quadratic attention can't.
+
+Layout follows Mamba2 (arXiv:2405.21060) with ngroups=1:
+  in_proj: d_model -> [z (di), x (di), B (S), C (S), dt (H)]
+  conv1d (width cw) over the [x B C] channels, SiLU
+  SSD scan over H heads of head_dim P = di / H
+  gated RMSNorm: y * silu(z), out_proj: di -> d_model
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.shard.spec import NO_SHARD, ShardCtx, cs
+
+from .layers import dense_init, rmsnorm
+
+#: "chunked" (SSD block decomposition; production) or "sequential" (naive
+#: per-step recurrence; the paper-faithful baseline for EXPERIMENTS.md §Perf)
+SSD_MODE = "chunked"
+
+
+def ssm_init(key, cfg, dtype):
+    d, di, S, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * S + H), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cw, di + 2 * S), scale=cw ** -0.5, dtype=dtype),
+        "conv_b": jnp.zeros((di + 2 * S,), dtype),
+        # A in (-1, 0): log-decay rates; init log-uniform like mamba2
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[5], (di, d), dtype=dtype),
+    }
+
+
+def _split(cfg, proj):
+    di, S, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di : 2 * di + 2 * S]
+    dt = proj[..., 2 * di + 2 * S :]
+    return z, xBC, dt
+
+
+def ssm_block(
+    params,
+    x,  # (B, T, d)
+    cfg,
+    *,
+    ctx: ShardCtx = NO_SHARD,
+    cache: Optional[dict] = None,  # {"state" (B,H,S,P), "conv" (B,cw-1,di+2S)}
+    backend: str = "xla",
+):
+    """Returns (out (B,T,d), new_cache | None).
+
+    With ``cache`` and T == 1 this is the O(1) decode step; otherwise the
+    chunked scan (cache, if given, is consumed as the initial state and the
+    final state is returned -- enabling chunked prefill).
+    """
+    B, T, d = x.shape
+    di, S, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    cw = cfg.ssm_conv
+
+    proj = x @ params["in_proj"]  # (B, T, 2di+2S+H)
+    proj = cs(proj, "batch", None, "model", ctx=ctx)
+    z, xBC, dt = _split(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,T,H)
+    A = -jnp.exp(params["A_log"])  # (H,) negative
+
+    # --- short causal conv over time (prefix from cache during decode) ---
+    if cache is not None:
+        prev = cache["conv"]  # (B, cw-1, di+2S)
+        xBC_ext = jnp.concatenate([prev.astype(xBC.dtype), xBC], axis=1)
+        new_conv = xBC_ext[:, -(cw - 1) :, :]
+    else:
+        xBC_ext = jnp.pad(xBC, ((0, 0), (cw - 1, 0), (0, 0)))
+        new_conv = xBC_ext[:, -(cw - 1) :, :]
+    # depthwise conv: sum_w xBC_ext[:, t+w, :] * conv_w[w]
+    conv = sum(
+        xBC_ext[:, w : w + T, :] * params["conv_w"][w][None, None, :]
+        for w in range(cw)
+    ) + params["conv_b"]
+    xBC = jax.nn.silu(conv)
+
+    xs = xBC[..., :di].reshape(B, T, H, P)
+    Bm = xBC[..., di : di + S]
+    Cm = xBC[..., di + S :]
+
+    state0 = cache["state"] if cache is not None else None
+    if T == 1 and cache is not None:
+        # O(1) recurrence step
+        decay = jnp.exp(dt[:, 0, :] * A[None, :])  # (B,H)
+        inject = (
+            dt[:, 0, :, None, None]
+            * Bm[:, 0, None, :, None].astype(jnp.float32)
+            * xs[:, 0, :, None, :].astype(jnp.float32)
+        )  # (B,H,S,P)
+        state = decay[:, :, None, None] * state0 + inject
+        y = jnp.einsum("bs,bhsp->bhp", Cm[:, 0].astype(jnp.float32), state)
+        y = y[:, None]  # (B,1,H,P)
+        new_state = state
+    else:
+        if backend == "pallas":
+            from repro.kernels import ssd_scan
+
+            y = ssd_scan(xs, dt.astype(xs.dtype), A, Bm, Cm)
+            y = y.astype(jnp.float32)
+            # closed-form final state for the cache
+            acum = jnp.cumsum(dt * A[None, None, :], axis=1)  # (B,T,H)
+            w = dt * jnp.exp(acum[:, -1:, :] - acum)
+            new_state = jnp.einsum(
+                "bts,bth,bthp->bhsp",
+                Bm.astype(jnp.float32), w, xs.astype(jnp.float32))
+        elif SSD_MODE == "sequential":
+            from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+            y = ssd_scan_ref(xs, dt, A, Bm, Cm).astype(jnp.float32)
+            acum = jnp.cumsum(dt * A[None, None, :], axis=1)
+            w = dt * jnp.exp(acum[:, -1:, :] - acum)
+            new_state = jnp.einsum(
+                "bts,bth,bthp->bhsp",
+                Bm.astype(jnp.float32), w, xs.astype(jnp.float32))
+        else:
+            # chunked SSD block decomposition (pure XLA): state round-trips
+            # HBM once per 128-step chunk instead of every step -- the same
+            # algorithm the Pallas kernel implements on TPU.
+            from repro.kernels.ssd_scan.ref import ssd_scan_chunked_xla
+
+            yc, new_state = ssd_scan_chunked_xla(xs, dt, A, Bm, Cm)
+            y = yc.astype(jnp.float32)
+        if state0 is not None:
+            acum = jnp.cumsum(dt * A[None, None, :], axis=1)  # (B,T,H)
+            y = y + jnp.einsum(
+                "bts,bth,bhsp->bthp", Cm.astype(jnp.float32), jnp.exp(acum), state0
+            )
+            new_state = new_state + jnp.exp(acum[:, -1, :])[:, :, None, None] * state0
+
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)  # skip
+    y = y.reshape(B, T, di)
+    y = rmsnorm(y.astype(x.dtype) * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    y = cs(y, "batch", None, "model", ctx=ctx)
+    out = y @ params["out_proj"]
+    out = cs(out, "batch", None, None, ctx=ctx)
+    new_cache = {"state": new_state, "conv": new_conv} if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,2 @@
+"""AdamW optimizer + schedules + gradient compression."""
+from .adamw import AdamWConfig, global_norm, init, init_for, lr_at, update  # noqa: F401

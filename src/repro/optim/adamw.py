@@ -1,0 +1,100 @@
+"""AdamW with ZeRO-style sharded states + optional gradient compression.
+
+Pure JAX (no optax in this environment).  Optimizer state mirrors the param
+pytree, so the launcher shards m/v exactly like the params (FSDP axis) --
+that is the ZeRO-3 arrangement.  ``compress`` optionally casts gradients to
+bf16 *before* the (pseudo-)all-reduce boundary -- under pjit the cast happens
+pre-reduction, halving cross-pod gradient bytes (the distributed-optimization
+trick recorded in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    compress: Optional[str] = None  # None | "bf16"
+    # optimizer-state dtype: float32 (default) or bfloat16 ("8-bit Adam"
+    # style memory saving -- halves m/v; fine with the f32 update math below)
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+    schedule: str = "cosine"  # "cosine" | "constant"
+    total_steps: int = 10_000
+
+
+def lr_at(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def init(params, state_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_for(cfg: "AdamWConfig", params):
+    import numpy as _np  # noqa: F401
+
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.state_dtype]
+    return init(params, dt)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    if cfg.compress == "bf16":
+        grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    sdt = state["m"] and jax.tree.leaves(state["m"])[0].dtype
+    new_m = jax.tree.map(
+        lambda m, g: (cfg.b1 * m.astype(jnp.float32)
+                      + (1 - cfg.b1) * g).astype(sdt), state["m"], grads)
+    new_v = jax.tree.map(
+        lambda v, g: (cfg.b2 * v.astype(jnp.float32)
+                      + (1 - cfg.b2) * g * g).astype(sdt), state["v"], grads)
+
+    def upd(p, m, v):
+        mh = m.astype(jnp.float32) / b1c
+        vh = v.astype(jnp.float32) / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,2 @@
+"""Serving: engine + DLS continuous batching."""
+from .engine import ContinuousBatcher, Engine, Request  # noqa: F401

@@ -1,0 +1,11 @@
+"""Sharding: logical axes, production mesh, param rules."""
+from .spec import NO_SHARD, ShardCtx, cs, make_ctx  # noqa: F401
+from .rules import (  # noqa: F401
+    fix_divisibility,
+    shardings_for,
+    batch_pspecs_for_mesh,
+    cache_pspecs,
+    params_pspecs,
+    to_shardings,
+    validate_pspecs,
+)

@@ -1,0 +1,235 @@
+"""Parameter / activation / cache sharding rules for the production mesh.
+
+Scheme (MaxText-style 2D): every weight matrix is sharded
+  * on the **model** axis along its TP dimension (heads, ffn hidden,
+    experts, vocab), and
+  * on the **fsdp** axis (= the mesh "data" axis) along the other dimension
+    (ZeRO-3: params, grads and optimizer states all carry the same specs).
+The "pod" axis is pure DP by default (gradients all-reduce across pods;
+params replicated pod-wise) -- cross-pod FSDP would put per-layer
+all-gathers on the slow inter-pod links.  `fsdp_pods=True` flips that
+trade-off for models that do not fit one pod's HBM.
+
+Rules match leaves by their path suffix inside the (possibly stacked) param
+pytree; stacked layer dims get a leading None automatically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _rule_for(path_keys, leaf_ndim, *, fsdp: Optional[str], tp: Optional[str]):
+    """PartitionSpec for one param leaf, *excluding* any stacked-layer dims."""
+    name = path_keys[-1]
+    parent = path_keys[-2] if len(path_keys) >= 2 else ""
+
+    # ---- embeddings / head ----
+    if name == "embed":
+        return P(tp, fsdp)  # (vocab, d)
+    if name == "lm_head":
+        return P(fsdp, tp)  # (d, vocab)
+
+    # ---- attention ----
+    if name in ("wq", "wk", "wv"):
+        return P(fsdp, tp)  # (d, heads*hd) column-parallel
+    if name == "wo":
+        return P(tp, fsdp)  # (heads*hd, d) row-parallel
+
+    # ---- dense mlp ----
+    if name in ("wg", "wu") and parent != "moe":
+        return P(fsdp, tp)  # (d, ff)
+    if name == "wd" and parent != "moe":
+        return P(tp, fsdp)  # (ff, d)
+
+    # ---- moe ----
+    if name == "router":
+        return P(fsdp, None)  # (d, E) small; replicate E
+    if parent == "moe" or (len(path_keys) >= 2 and "moe" in path_keys):
+        if name in ("wg", "wu"):
+            return P(tp, fsdp, None)  # (E, d, ff): expert-parallel
+        if name == "wd":
+            return P(tp, None, fsdp)  # (E, ff, d)
+
+    # ---- ssm ----
+    if name == "in_proj":
+        return P(fsdp, tp)  # (d, 2di+2S+H)
+    if name == "out_proj":
+        return P(tp, fsdp)  # (di, d)
+    if name == "conv_w":
+        return P(None, tp)  # (cw, di+2S)
+    if name in ("conv_b", "norm_w"):
+        return P(tp)
+    if name in ("A_log", "D", "dt_bias"):
+        return P(None)
+
+    # ---- norms & anything 1-D ----
+    if leaf_ndim == 1:
+        return P(None)
+    return P(*([None] * leaf_ndim))
+
+
+# param leaves that live under a stacked layer axis
+_STACKED_ROOTS = ("layers", "enc_layers", "dec_layers")
+
+
+def params_pspecs(params_tree, *, fsdp="data", tp="model", fsdp_pods=False):
+    """PartitionSpec pytree matching ``params_tree`` (arrays or SDS)."""
+    fsdp_axes = ("pod", fsdp) if fsdp_pods else fsdp
+
+    def visit(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        keys = [k for k in keys if k is not None]
+        stacked = any(k in _STACKED_ROOTS for k in keys)
+        ndim = leaf.ndim - (1 if stacked else 0)
+        spec = _rule_for(keys, ndim, fsdp=fsdp_axes, tp=tp)
+        if stacked:
+            spec = P(None, *spec)
+        # guard: spec rank must match
+        if len(spec) != leaf.ndim:
+            spec = P(*(list(spec) + [None] * (leaf.ndim - len(spec))))[: leaf.ndim] \
+                if len(spec) < leaf.ndim else P(*list(spec)[: leaf.ndim])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(visit, params_tree)
+
+
+def resolve_batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_pspecs_for_mesh(batch_tree, mesh):
+    axes = resolve_batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def visit(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 1 and axes:
+            # shard the batch dim over as many of (pod, data) as divide it
+            # (long_500k has global_batch=1: fully replicated)
+            use = []
+            rem = leaf.shape[0]
+            for a in axes:
+                if rem % sizes[a] == 0:
+                    use.append(a)
+                    rem //= sizes[a]
+            if use:
+                spec[0] = tuple(use) if len(use) > 1 else use[0]
+        return P(*spec)
+
+    return jax.tree.map(visit, batch_tree)
+
+
+def cache_pspecs(cache_tree, mesh, *, tp="model", kv_heads: Optional[int] = None):
+    """KV/SSM caches: batch dim on data axes, heads (or head_dim) on model.
+
+    Cache leaves: kv (L, B, S, Hkv, hd); ssm state (L, B, H, S, P);
+    conv (L, B, cw-1, C); pos scalar.
+
+    GQA wrinkle: when Hkv < |model| (e.g. qwen3's kv=4 on a 16-way TP axis),
+    sharding the head dim would pad it |model|/Hkv-fold.  In that case we
+    shard ``hd`` instead (attention then reduces partial sums over model).
+    """
+    axes = resolve_batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp_size = sizes.get(tp, 1)
+    heads_ok = kv_heads is None or (kv_heads % tp_size == 0)
+
+    def baxes_for(extent):
+        """Batch axes that actually divide the batch extent (1 => replicate)."""
+        use, rem = [], extent
+        for a in axes:
+            if rem % sizes[a] == 0:
+                use.append(a)
+                rem //= sizes[a]
+        return tuple(use) if len(use) > 1 else (use[0] if use else None)
+
+    def visit(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if leaf.ndim == 0:
+            return P()
+        if "conv" in keys:
+            return P(None, baxes_for(leaf.shape[1]), None, tp)
+        if "state" in keys:
+            return P(None, baxes_for(leaf.shape[1]), tp, None, None)
+        if leaf.ndim == 5:  # kv / cross kv: (L, B, S, Hkv, hd)
+            b = baxes_for(leaf.shape[1])
+            if heads_ok:
+                return P(None, b, None, tp, None)
+            return P(None, b, None, None, tp)  # shard hd instead
+        spec = [None] * leaf.ndim
+        spec[0] = baxes_for(leaf.shape[0])
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(visit, cache_tree)
+
+
+def to_shardings(pspec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def fix_divisibility(tree, pspec_tree, mesh):
+    """Drop sharding axes that do not divide their dimension.
+
+    Explicit pjit in/out shardings must divide evenly (unlike internal
+    constraints, which GSPMD pads).  For awkward extents -- vocab 256206,
+    head_dim 120, batch 1 -- we keep the maximal prefix of each dim's axes
+    that divides; the rest of the dim is replicated.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(leaf, spec):
+        out = []
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = list(ax) if isinstance(ax, tuple) else [ax]
+            keep, rem = [], leaf.shape[dim]
+            for a in axes:
+                if rem % sizes[a] == 0:
+                    keep.append(a)
+                    rem //= sizes[a]
+                else:
+                    break
+            out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+        return P(*out)
+
+    arr_leaves, td = jax.tree_util.tree_flatten(tree)
+    spec_leaves, _ = jax.tree_util.tree_flatten(
+        pspec_tree, is_leaf=lambda x: isinstance(x, P))
+    fixed = [fix(a, s) for a, s in zip(arr_leaves, spec_leaves)]
+    return jax.tree_util.tree_unflatten(td, fixed)
+
+
+def shardings_for(tree, pspec_tree, mesh):
+    """Divisibility-fixed NamedShardings for ``tree``."""
+    return to_shardings(fix_divisibility(tree, pspec_tree, mesh), mesh)
+
+
+def validate_pspecs(params_tree, pspec_tree, mesh):
+    """Every sharded dim must divide by its mesh-axes product."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    problems = []
+
+    def visit(path, leaf, spec):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([sizes[a] for a in axes]))
+            if leaf.shape[dim] % n != 0:
+                problems.append(
+                    f"{jax.tree_util.keystr(path)}: dim {dim} ({leaf.shape[dim]}) "
+                    f"% mesh{axes}={n} != 0"
+                )
+
+    jax.tree_util.tree_map_with_path(visit, params_tree, pspec_tree)
+    return problems

@@ -1,0 +1,79 @@
+"""Sharding vocabulary shared by models and the launcher.
+
+The model code is written against *logical* axes and applies
+``with_sharding_constraint`` hints only when a ``ShardCtx`` is active --
+on a bare CPU (tests, smoke runs) the hints are no-ops.
+
+Logical axis conventions (see DESIGN.md Sec. 6):
+  batch  -> ("pod", "data")   activations' batch dim; FSDP axis for params
+  model  -> "model"           TP: heads / ffn hidden / experts / vocab
+  seq    -> None              sequence stays unsharded (SP was considered
+                              and deferred: the hillclimb cells were memory/
+                              collective-bound per device, which SP does not
+                              change at fixed chip count -- EXPERIMENTS §Perf)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Active logical->physical axis binding. None axes mean 'replicated'."""
+
+    batch_axes: Optional[Tuple[str, ...]] = None  # e.g. ("pod", "data")
+    model_axis: Optional[str] = None  # e.g. "model"
+    enabled: bool = True
+    # physical sizes of the batch/model axes (for group-local algorithms
+    # like the MoE dispatch, which need the data-parallel degree)
+    batch_size_product: int = 1
+    model_size: int = 1
+
+    @property
+    def batch(self):
+        return self.batch_axes if self.batch_axes else None
+
+    @property
+    def model(self):
+        return self.model_axis
+
+
+#: disabled context used by CPU tests / smoke runs
+NO_SHARD = ShardCtx(enabled=False)
+
+
+def make_ctx(mesh: "jax.sharding.Mesh") -> ShardCtx:
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    batch = tuple(n for n in names if n in ("pod", "data"))
+    model = "model" if "model" in names else None
+    bprod = 1
+    for a in batch:
+        bprod *= sizes[a]
+    return ShardCtx(batch_axes=batch or None, model_axis=model,
+                    batch_size_product=bprod, model_size=sizes.get("model", 1))
+
+
+def cs(x, *spec, ctx: ShardCtx):
+    """Constrain ``x`` to PartitionSpec(*spec); no-op when ctx disabled.
+
+    Spec entries are the *logical* tokens "batch" / "model" / None, resolved
+    through the context.
+    """
+    if not ctx.enabled:
+        return x
+    resolved = []
+    for s in spec:
+        if s == "batch":
+            resolved.append(ctx.batch)
+        elif s == "model":
+            resolved.append(ctx.model)
+        else:
+            resolved.append(s)
+    if all(r is None for r in resolved):
+        return x  # fully replicated: constraint is a no-op (and needs no mesh)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

@@ -1,0 +1,3 @@
+"""Training: loss, step, trainer loop, straggler mitigation."""
+from .step import ce_loss, loss_fn, make_eval_step, make_train_step  # noqa: F401
+from .trainer import SimCluster, TrainConfig, Trainer  # noqa: F401

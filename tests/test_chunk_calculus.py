@@ -1,0 +1,175 @@
+"""Property + unit tests for the chunk calculus (paper Table 2 / Eq. 1-3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    TECHNIQUES,
+    WEIGHTED,
+    LoopSpec,
+    chunk_series_recurrence,
+    chunk_size_closed,
+    chunk_sizes_closed,
+    plan,
+    plan_jax,
+    tss_constants,
+    weights_from_speeds,
+)
+
+N_ST = st.integers(min_value=1, max_value=50_000)
+P_ST = st.integers(min_value=1, max_value=512)
+
+
+# ---------------------------------------------------------------------------
+# Partition property: every schedule covers [0, N) exactly once.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tech", TECHNIQUES)
+@given(N=N_ST, P=P_ST)
+@settings(max_examples=30, deadline=None)
+def test_plan_partitions_the_loop(tech, N, P):
+    spec = LoopSpec(tech, N=N, P=P)
+    sizes, starts = plan(spec)
+    assert sizes.sum() == N
+    assert (sizes > 0).all()
+    assert starts[0] == 0
+    np.testing.assert_array_equal(starts[1:], np.cumsum(sizes)[:-1])
+
+
+@pytest.mark.parametrize("tech", TECHNIQUES)
+@given(N=N_ST, P=P_ST)
+@settings(max_examples=30, deadline=None)
+def test_recurrence_partitions_the_loop(tech, N, P):
+    spec = LoopSpec(tech, N=N, P=P)
+    rec = chunk_series_recurrence(spec)
+    assert sum(rec) == N
+    assert all(k > 0 for k in rec)
+
+
+# ---------------------------------------------------------------------------
+# Closed form == recurrence (the paper's Eq. 1-3 vs Table 2).
+# TSS is algebraically exact (paper Eq. 4-10); GSS/FAC2 match modulo
+# ceil-accumulation on the remainder -- the paper adopts the closed forms
+# from [5], which bound the drift; we assert exactness for TSS and a tight
+# band + identical batch structure for the others.
+# ---------------------------------------------------------------------------
+
+
+@given(N=st.integers(10, 100_000), P=st.integers(1, 256))
+@settings(max_examples=50, deadline=None)
+def test_tss_closed_equals_recurrence(N, P):
+    spec = LoopSpec("tss", N=N, P=P)
+    rec = chunk_series_recurrence(spec)
+    closed = [chunk_size_closed(spec, i) for i in range(len(rec))]
+    # identical except the final truncated chunk
+    assert closed[: len(rec) - 1] == rec[:-1]
+    assert closed[-1] >= rec[-1]
+
+
+@given(N=st.integers(10, 100_000), P=st.integers(2, 256))
+@settings(max_examples=50, deadline=None)
+def test_gss_closed_tracks_recurrence(N, P):
+    spec = LoopSpec("gss", N=N, P=P)
+    rec = chunk_series_recurrence(spec)
+    # Compare the first half of the series (before ceil drift accumulates in
+    # the tail of 1-iteration chunks): relative error <= 1/P + 1 iteration.
+    m = max(len(rec) // 2, 1)
+    for i in range(m):
+        closed = chunk_size_closed(spec, i)
+        assert abs(closed - rec[i]) <= max(1, rec[i] // P + 1), (i, closed, rec[i])
+
+
+def test_gss_paper_example():
+    # Paper Sec. 3: N=10, P=2 -> K_0 = 5, K_1 = 3.
+    spec = LoopSpec("gss", N=10, P=2)
+    assert chunk_size_closed(spec, 0) == 5
+    assert chunk_size_closed(spec, 1) == 3
+
+
+def test_fac2_batches_of_P_halve():
+    spec = LoopSpec("fac2", N=100_000, P=8)
+    sizes, _ = plan(spec)
+    # First batch: ceil(N/2P) repeated P times.
+    assert (sizes[:8] == 6250).all()
+    # Second batch: half of that.
+    assert (sizes[8:16] == 3125).all()
+
+
+def test_tss_constants_match_table2():
+    N, P = 10_000, 16
+    K0, Klast, S, C = tss_constants(N, P)
+    assert K0 == int(np.ceil(N / (2 * P)))
+    assert Klast == 1
+    assert S == int(np.ceil(2 * N / (K0 + Klast)))
+    assert C == (K0 - Klast) // (S - 1)
+
+
+# ---------------------------------------------------------------------------
+# Monotonicity: GSS/TSS/FAC2/TFSS chunk sizes are non-increasing.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tech", ["gss", "tss", "fac2", "tfss"])
+@given(N=st.integers(100, 100_000), P=st.integers(1, 128))
+@settings(max_examples=30, deadline=None)
+def test_decreasing_chunks(tech, N, P):
+    spec = LoopSpec(tech, N=N, P=P)
+    sizes, _ = plan(spec)
+    assert (np.diff(sizes[:-1]) <= 0).all()  # last chunk may be truncated
+
+
+# ---------------------------------------------------------------------------
+# Weighted techniques.
+# ---------------------------------------------------------------------------
+
+
+@given(
+    N=st.integers(1000, 50_000),
+    fast=st.integers(1, 8),
+    slow=st.integers(1, 8),
+    ratio=st.floats(1.5, 8.0),
+)
+@settings(max_examples=30, deadline=None)
+def test_wf_weights_scale_chunks(N, fast, slow, ratio):
+    P = fast + slow
+    w = weights_from_speeds([ratio] * fast + [1.0] * slow)
+    spec = LoopSpec("wf", N=N, P=P, weights=tuple(w))
+    k_fast = chunk_size_closed(spec, 0, pe=0)
+    k_slow = chunk_size_closed(spec, 0, pe=P - 1)
+    assert k_fast >= k_slow
+    # ratio preserved within ceil rounding
+    assert k_fast <= int(np.ceil(ratio * k_slow)) + 1
+
+
+def test_weights_sum_to_P():
+    w = weights_from_speeds([0.205] * 192 + [1.0] * 96)
+    assert np.isclose(w.sum(), 288)
+
+
+# ---------------------------------------------------------------------------
+# jnp planner == numpy planner (on-device batched planning).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tech", ["static", "ss", "gss", "tss", "fac2", "tfss"])
+def test_plan_jax_matches_numpy(tech):
+    spec = LoopSpec(tech, N=12_345, P=24)
+    sizes_np, starts_np = plan(spec)
+    sizes_j, starts_j, n_valid = plan_jax(spec)
+    n = int(n_valid)
+    assert n == len(sizes_np)
+    np.testing.assert_array_equal(np.asarray(sizes_j)[:n], sizes_np)
+    np.testing.assert_array_equal(np.asarray(starts_j)[:n], starts_np)
+    # padding is zero-sized
+    assert (np.asarray(sizes_j)[n:] == 0).all()
+
+
+@pytest.mark.parametrize("tech", ["gss", "tss", "fac2"])
+def test_vectorized_matches_scalar(tech):
+    spec = LoopSpec(tech, N=99_999, P=31)
+    idx = np.arange(200)
+    vec = chunk_sizes_closed(spec, idx)
+    scal = np.array([chunk_size_closed(spec, int(i)) for i in idx])
+    np.testing.assert_array_equal(vec, scal)

@@ -1,0 +1,136 @@
+"""Dry-run machinery tests (scaled-down meshes; production runs in sweep).
+
+These run dryrun.py as a subprocess (the 8-device host-platform override
+must happen before jax init, and the main test process must keep 1 device).
+"""
+import json
+import subprocess
+import sys
+
+import pytest
+
+REPO = __file__.rsplit("/tests/", 1)[0]
+
+
+def run_cell(arch, shape, mesh, tmp, extra=()):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--mesh", mesh,
+           "--devices", "8", "--batch", "16", "--out", str(tmp), *extra]
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=1500,
+                       cwd=REPO, env={"PYTHONPATH": f"{REPO}/src",
+                                      "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    rec = json.load(open(f"{tmp}/{arch}_{shape}_{mesh}.json"))
+    return rec
+
+
+@pytest.mark.slow
+def test_dryrun_train_cell_pod(tmp_path):
+    rec = run_cell("tinyllama-1.1b", "train_4k", "pod", tmp_path)
+    assert rec["status"] == "ok"
+    assert rec["cost"]["flops"] > 1e13  # trip-adjusted, not loop-body-once
+    assert rec["cost"]["flops"] > 10 * rec["cost"]["xla_flops_raw"]
+    assert rec["memory"]["peak_bytes"] > 0
+    assert rec["collective_moved_bytes"] > 0
+    assert "all-gather" in rec["collectives"] or "all-reduce" in rec["collectives"]
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cell_multipod(tmp_path):
+    rec = run_cell("mamba2-370m", "decode_32k", "multipod", tmp_path)
+    assert rec["status"] == "ok"
+    assert rec["mesh_shape"]["pod"] == 2
+
+
+@pytest.mark.slow
+def test_dryrun_skip_policy(tmp_path):
+    rec = run_cell("deepseek-67b", "long_500k", "pod", tmp_path)
+    assert rec["status"] == "skipped"
+    rec = run_cell("h2o-danube-3-4b", "long_500k", "pod", tmp_path)
+    assert rec["status"] == "ok"  # SWA is sub-quadratic
+
+
+def test_hlo_analysis_on_sample():
+    """Analyzer math on a handcrafted mini-HLO."""
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    txt = """\
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] constant({...})
+  %d = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,16] all-gather(%d), channel_id=1, replica_groups=[2,4]<=[8], dimensions={0}
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %ag)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16] parameter(0)
+  %z = s32[] constant(0)
+  %tup = (s32[], f32[8,16]) tuple(%z, %a)
+  %w2 = (s32[], f32[8,16]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %o = f32[8,16] get-tuple-element(%w2), index=1
+}
+"""
+    r = analyze_hlo(txt)
+    # dot: 2*8*16*16 = 4096 flops, x5 trips
+    assert r["flops"] == 5 * 4096, r["flops"]
+    ag = r["collectives"]["all-gather"]
+    assert ag["count"] == 5
+    # ring model: result 8*16*4 bytes * (4-1)/4 per execution
+    assert abs(ag["moved_bytes"] - 5 * 512 * 0.75) < 1e-6
+
+
+def test_shard_rules_cover_all_archs():
+    """Every param leaf of every arch gets a rank-matching PartitionSpec."""
+    import jax
+
+    from repro.configs import ARCHS
+    from repro.models import api
+    from repro.shard import params_pspecs
+
+    for name, cfg in ARCHS.items():
+        sds = api.abstract_params(cfg)
+        specs = params_pspecs(sds)
+        arr_leaves = jax.tree_util.tree_flatten(sds)[0]
+        from jax.sharding import PartitionSpec as P
+
+        spec_leaves = jax.tree_util.tree_flatten(
+            specs, is_leaf=lambda x: isinstance(x, P))[0]
+        assert len(arr_leaves) == len(spec_leaves)
+        for a, s in zip(arr_leaves, spec_leaves):
+            assert len(s) == a.ndim, (name, a.shape, s)
+
+
+def test_fix_divisibility_drops_bad_axes():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.shard import fix_divisibility
+
+    mesh = jax.make_mesh((1,), ("model",))  # model size 1: everything divides
+    tree = {"a": jax.ShapeDtypeStruct((7, 8), jnp.float32)}
+    fixed = fix_divisibility(tree, {"a": P("model", None)}, mesh)
+    assert fixed["a"] == P("model", None)
+
+    # fake a 4-wide axis via test mesh helper semantics
+    import numpy as np
+
+    class FakeMesh:
+        axis_names = ("model",)
+        devices = np.empty((4,), dtype=object)
+
+    fixed = fix_divisibility(tree, {"a": P("model", None)}, FakeMesh())
+    assert fixed["a"] == P(None, None)  # 7 % 4 != 0 -> dropped
+    fixed = fix_divisibility({"a": jax.ShapeDtypeStruct((8, 7), jnp.float32)},
+                             {"a": P("model", None)}, FakeMesh())
+    assert fixed["a"] == P("model", None)

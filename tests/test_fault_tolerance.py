@@ -1,0 +1,116 @@
+"""Fault-tolerance & elasticity: the one-sided protocol's operational story.
+
+The paper's protocol is *naturally elastic*: membership is implicit (a PE
+participates by claiming), so host death means unclaimed work flows to
+survivors, and a new host can join mid-epoch by simply starting to claim.
+These tests exercise that story end-to-end at the data-pipeline layer, plus
+crash-restart with the window counters restored from a checkpoint.
+"""
+import threading
+
+import numpy as np
+
+from repro.core import LoopSpec, OneSidedRuntime
+from repro.core.rma import ThreadWindow
+from repro.data import DLSSampler, EpochState
+from repro.train.trainer import SimCluster
+
+
+def test_late_joiner_picks_up_work():
+    """Elastic scale-up: a host that joins mid-epoch claims real work."""
+    win = ThreadWindow()
+    N, H = 5000, 4
+    early = [DLSSampler(N, H, h, window=win, technique="fac2") for h in range(3)]
+    # three hosts drain ~half the epoch
+    claimed_early = 0
+    for _ in range(20):
+        for s in early:
+            idx = s.claim_batch(32)
+            if idx is not None:
+                claimed_early += len(idx)
+    # host 3 joins late and still gets work
+    late = DLSSampler(N, H, 3, window=win, technique="fac2")
+    got = late.claim_batch(32)
+    assert got is not None and len(got) == 32
+    # and the global partition property still holds across all claimers
+    seen = set(got.tolist())
+    while True:
+        idx = late.claim_batch(32)
+        if idx is None:
+            break
+        assert not (set(idx.tolist()) & seen)
+        seen.update(idx.tolist())
+
+
+def test_dead_host_work_flows_to_survivors():
+    cl = SimCluster(4, 3000, technique="fac2")
+    counts = cl.run_epoch(batch_size=8, work_time=lambda h: 0.0002,
+                          kill_at={1: 2, 3: 2})
+    # two hosts die after 2 batches each; the epoch still (nearly) completes
+    assert counts.sum() >= 3000 - 2 * (4 * 8) - 2 * 2 * 8 - 4 * 8
+    assert counts[0] + counts[2] > 0.75 * counts.sum()
+
+
+def test_window_crash_restart_no_duplicates():
+    """Counters restored from a checkpoint: no sample re-served, none lost
+    beyond the in-flight buffer (which the checkpoint also carries)."""
+    win = ThreadWindow()
+    s = DLSSampler(2000, 2, 0, window=win, technique="gss")
+    served = []
+    for _ in range(5):
+        served.extend(s.claim_batch(16).tolist())
+    st = s.state()
+    # crash: new process, fresh window, restore
+    s2 = DLSSampler(2000, 2, 0, window=ThreadWindow(), technique="gss")
+    s2.restore(EpochState(**{
+        "epoch": st.epoch, "next_step_i": st.next_step_i,
+        "next_lp": st.next_lp, "leftover": st.leftover}))
+    after = []
+    while True:
+        idx = s2.claim_batch(16)
+        if idx is None:
+            break
+        after.extend(idx.tolist())
+    assert not (set(served) & set(after)), "re-served after restart"
+    assert len(served) + len(after) >= 2000 - 16  # tail smaller than a batch
+
+
+def test_concurrent_claims_with_contention_partition():
+    """Heavy contention (slow RMW) still yields an exact partition."""
+    N = 8_000
+    spec = LoopSpec("gss", N=N, P=16)
+    rt = OneSidedRuntime(spec, ThreadWindow(rmw_latency=2e-5))
+    hits = np.zeros(N, np.int32)
+    lock = threading.Lock()
+
+    def worker(pe):
+        while True:
+            c = rt.claim(pe)
+            if c is None:
+                return
+            with lock:
+                hits[c.start:c.stop] += 1
+
+    ts = [threading.Thread(target=worker, args=(j,)) for j in range(16)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert (hits == 1).all()
+
+
+def test_awf_demotes_straggler_then_recovers():
+    """A host that slows down gets smaller chunks; recovery restores them."""
+    from repro.core.weights import WeightBoard
+
+    board = WeightBoard(2, ema=0.7)
+    for _ in range(10):
+        board.record(0, 100, 1.0)  # 100 it/s
+        board.record(1, 100, 1.0)
+    w_before = board.weight(1)
+    for _ in range(10):
+        board.record(0, 100, 1.0)
+        board.record(1, 100, 8.0)  # straggling: 12.5 it/s
+    w_slow = board.weight(1)
+    assert w_slow < 0.4 * w_before
+    for _ in range(20):
+        board.record(1, 100, 1.0)
+    assert board.weight(1) > 0.8 * w_before

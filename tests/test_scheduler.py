@@ -1,0 +1,120 @@
+"""Concurrency tests for the One_Sided / Two_Sided runtimes (paper Sec. 3)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LoopSpec,
+    OneSidedRuntime,
+    ThreadWindow,
+    TwoSidedRuntime,
+    run_threaded_one_sided,
+    run_threaded_two_sided,
+    weights_from_speeds,
+)
+
+TECHS = ["ss", "gss", "tss", "fac2", "wf", "static", "tfss"]
+
+
+@pytest.mark.parametrize("tech", TECHS)
+def test_one_sided_partition_under_concurrency(tech):
+    """Every iteration executed exactly once, no matter the interleaving."""
+    N, P = 20_000, 16
+    w = tuple(weights_from_speeds(np.linspace(0.5, 2.0, P))) if tech == "wf" else None
+    spec = LoopSpec(tech, N=N, P=P, weights=w)
+    hits = np.zeros(N, dtype=np.int64)
+    lock = threading.Lock()
+
+    def work(a, b):
+        with lock:
+            hits[a:b] += 1
+
+    claims = run_threaded_one_sided(spec, work, n_threads=P)
+    assert (hits == 1).all()
+    # claims partition [0, N)
+    ivals = sorted((c.start, c.stop) for c in claims)
+    assert ivals[0][0] == 0 and ivals[-1][1] == N
+    for (a0, b0), (a1, b1) in zip(ivals, ivals[1:]):
+        assert b0 == a1, "gap or overlap in claimed intervals"
+
+
+@pytest.mark.parametrize("tech", ["ss", "gss", "fac2"])
+def test_two_sided_partition_under_concurrency(tech):
+    N, P = 20_000, 8
+    spec = LoopSpec(tech, N=N, P=P)
+    hits = np.zeros(N, dtype=np.int64)
+    lock = threading.Lock()
+
+    def work(a, b):
+        with lock:
+            hits[a:b] += 1
+
+    claims = run_threaded_two_sided(spec, work, n_threads=P)
+    assert (hits == 1).all()
+    assert sum(c.size for c in claims) == N
+
+
+def test_one_sided_step_indices_unique():
+    """Step 1's fetch-add must hand out unique i values (paper's atomicity)."""
+    spec = LoopSpec("fac2", N=50_000, P=32)
+    # widen the race window with a slow RMW
+    rt = OneSidedRuntime(spec, ThreadWindow(rmw_latency=1e-5))
+    seen = []
+    lock = threading.Lock()
+
+    def worker(pe):
+        while True:
+            c = rt.claim(pe)
+            if c is None:
+                return
+            with lock:
+                seen.append(c.step)
+
+    ts = [threading.Thread(target=worker, args=(j,)) for j in range(8)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert len(seen) == len(set(seen)), "duplicate scheduling step index"
+
+
+def test_one_sided_namespacing_allows_multiple_loops():
+    """Monotonic KV backends need per-loop counters; two loops must not clash."""
+    win = ThreadWindow()
+    spec = LoopSpec("gss", N=1000, P=4)
+    r1 = OneSidedRuntime(spec, win)
+    r2 = OneSidedRuntime(spec, win)
+    tot1 = tot2 = 0
+    while True:
+        c = r1.claim(0)
+        if c is None:
+            break
+        tot1 += c.size
+    while True:
+        c = r2.claim(0)
+        if c is None:
+            break
+        tot2 += c.size
+    assert tot1 == 1000 and tot2 == 1000
+
+
+def test_two_sided_master_recurrence_matches_series():
+    from repro.core import chunk_series_recurrence
+
+    spec = LoopSpec("gss", N=5000, P=4)
+    rt = TwoSidedRuntime(spec)
+    got = []
+    while True:
+        c = rt._next_chunk(pe=len(got) % 4)
+        if c is None:
+            break
+        got.append(c.size)
+    assert got == chunk_series_recurrence(spec)
+
+
+def test_awf_live_weight_changes_chunk():
+    spec = LoopSpec("awf", N=100_000, P=8, weights=tuple([1.0] * 8))
+    rt = OneSidedRuntime(spec)
+    c_small = rt.claim(0, weight=0.25)
+    c_big = rt.claim(1, weight=2.0)
+    assert c_big.size > c_small.size
+    assert c_big.size >= int(0.9 * 8 * c_small.size)  # ~8x modulo ceil/batch

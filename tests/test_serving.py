@@ -1,0 +1,98 @@
+"""Serving-engine correctness: batched generation and admission scheduling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.serve import ContinuousBatcher, Engine, Request
+
+
+def _cfg():
+    return ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                       n_heads=2, n_kv_heads=2, d_ff=128, vocab=97,
+                       dtype="float32")
+
+
+def test_generate_matches_stepwise_greedy():
+    """Engine.generate == manual prefill + argmax decode loop."""
+    cfg = _cfg()
+    params = api.init_params(jax.random.key(0), cfg)
+    eng = Engine(cfg, params)
+    prompts = np.random.default_rng(1).integers(0, 97, (3, 6)).astype(np.int32)
+
+    out = eng.generate(prompts, max_new=4)
+
+    cache = api.init_cache(cfg, 3, 32)
+    lg, cache = api.prefill(params, cfg, {"tokens": jnp.asarray(prompts)}, cache)
+    toks = []
+    t = jnp.argmax(lg, -1).astype(jnp.int32)
+    for _ in range(4):
+        toks.append(np.asarray(t))
+        lg, cache = api.decode_step(params, cfg, t, cache)
+        t = jnp.argmax(lg, -1).astype(jnp.int32)
+    np.testing.assert_array_equal(out, np.stack(toks, 1))
+
+
+def test_generate_batch_independence():
+    """Each sequence's output is independent of its batch-mates."""
+    cfg = _cfg()
+    params = api.init_params(jax.random.key(0), cfg)
+    eng = Engine(cfg, params)
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, 97, (1, 6)).astype(np.int32)
+    b = rng.integers(0, 97, (1, 6)).astype(np.int32)
+    solo = eng.generate(a, max_new=4)
+    pair = eng.generate(np.concatenate([a, b]), max_new=4)
+    np.testing.assert_array_equal(solo[0], pair[0])
+
+
+def test_batcher_serves_every_request_once():
+    reqs = [Request(rid=i, prompt=np.zeros(4, np.int32)) for i in range(101)]
+    seen = []
+
+    def process(chunk, worker):
+        seen.extend(r.rid for r in chunk)
+        return 0.01 * len(chunk)
+
+    cb = ContinuousBatcher(n_workers=5, technique="fac2")
+    done = cb.schedule(reqs, process)
+    assert sorted(seen) == list(range(101))
+    assert (done > 0).all()
+
+
+def test_plan_jax_inside_jit():
+    """The on-device batched planner is jit-compatible (TPU planning path)."""
+    from repro.core import LoopSpec, plan, plan_jax
+
+    spec = LoopSpec("gss", N=5000, P=12)
+
+    @jax.jit
+    def planner():
+        return plan_jax(spec)
+
+    sizes, starts, n = planner()
+    np_sizes, np_starts = plan(spec)
+    n = int(n)
+    np.testing.assert_array_equal(np.asarray(sizes[:n]), np_sizes)
+    np.testing.assert_array_equal(np.asarray(starts[:n]), np_starts)
+
+
+def test_encdec_cross_kv_precompute_equals_recompute():
+    """Decode-time cached cross-KV == recomputing from encoder output."""
+    from repro.models import encdec
+    from repro.models.layers import attention_block, attention_with_kv, project_kv
+
+    cfg = ModelConfig(name="e", family="encdec", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab=50,
+                      enc_layers=1, dtype="float32")
+    params = encdec.init_params(jax.random.key(0), cfg)
+    lp = jax.tree.map(lambda a: a[0], params["dec_layers"])
+    src = jax.random.normal(jax.random.key(1), (2, 12, 64))
+    x = jax.random.normal(jax.random.key(2), (2, 5, 64))
+    k, v = project_kv(lp["cross_attn"], src, cfg)
+    out_cached = attention_with_kv(lp["cross_attn"], x, k, v, cfg)
+    out_direct, _ = attention_block(lp["cross_attn"], x, cfg, causal=False,
+                                    xattn_kv=src)
+    np.testing.assert_allclose(np.asarray(out_cached), np.asarray(out_direct),
+                               atol=1e-5)

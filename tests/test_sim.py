@@ -1,0 +1,155 @@
+"""DES reproduction tests: the paper's Fig. 4/5 claims, in simulation.
+
+The quantitative band test (`test_psia_grid_within_band`) checks the
+calibrated simulator against every T_p^loop the paper quotes numerically
+(Sec. 5) to within 10%.  The qualitative tests assert the paper's headline
+claims independent of calibration.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    LoopSpec,
+    SimConfig,
+    mandelbrot_iteration_counts,
+    paper_cluster,
+    psia_costs,
+    simulate,
+    weights_from_speeds,
+)
+from repro.core.sim import PSIA_MEAN_COST
+
+N, P = 288_000, 288
+
+
+@pytest.fixture(scope="module")
+def psia():
+    return psia_costs(N, mean=PSIA_MEAN_COST)
+
+
+def run(tech, impl, ratio, coord_on, costs, seed=0):
+    speeds, coord = paper_cluster(ratio, coord_on)
+    w = tuple(weights_from_speeds(speeds)) if tech == "wf" else None
+    spec = LoopSpec(tech, N=len(costs), P=len(speeds), weights=w)
+    return simulate(
+        SimConfig(spec, speeds, costs, impl=impl, coordinator=coord, seed=seed)
+    )
+
+
+# Every number the paper quotes in Sec. 5 (PSIA).
+PAPER_GRID = [
+    ("ss", "one_sided", "2:1", "knl", 109.0),
+    ("ss", "one_sided", "1:2", "knl", 68.5),
+    ("gss", "one_sided", "2:1", "knl", 185.0),
+    ("tss", "one_sided", "2:1", "knl", 125.0),
+    ("ss", "two_sided", "2:1", "knl", 233.0),
+    ("gss", "two_sided", "2:1", "knl", 236.0),
+    ("tss", "two_sided", "2:1", "knl", 136.0),
+    ("ss", "one_sided", "2:1", "xeon", 108.0),
+    ("gss", "one_sided", "2:1", "xeon", 177.0),
+    ("tss", "one_sided", "2:1", "xeon", 125.0),
+    ("fac2", "one_sided", "2:1", "xeon", 125.0),
+    ("wf", "one_sided", "2:1", "xeon", 110.0),
+    ("ss", "two_sided", "2:1", "xeon", 105.0),
+    ("gss", "two_sided", "2:1", "xeon", 175.0),
+    ("tss", "two_sided", "2:1", "xeon", 135.6),
+    ("fac2", "two_sided", "2:1", "xeon", 125.0),
+    ("wf", "two_sided", "2:1", "xeon", 106.45),
+]
+
+
+@pytest.mark.parametrize("tech,impl,ratio,coord,target", PAPER_GRID)
+def test_psia_grid_within_band(tech, impl, ratio, coord, target, psia):
+    r = run(tech, impl, ratio, coord, psia)
+    assert r.T_loop == pytest.approx(target, rel=0.10), (
+        f"{tech}/{impl}/{ratio}/{coord}: sim {r.T_loop:.1f}s vs paper {target}s"
+    )
+
+
+# ---- qualitative claims (calibration-independent) ----
+
+
+def test_slow_master_hurts_two_sided_ss(psia):
+    """Paper headline: SS 109s one-sided vs 233s two-sided with KNL master."""
+    one = run("ss", "one_sided", "2:1", "knl", psia)
+    two = run("ss", "two_sided", "2:1", "knl", psia)
+    assert two.T_loop > 1.8 * one.T_loop
+
+
+def test_one_sided_insensitive_to_coordinator_placement(psia):
+    """Fig. 4/5: One_Sided performs equally with coordinator on KNL or Xeon."""
+    for tech in ["ss", "gss", "tss", "fac2", "wf"]:
+        a = run(tech, "one_sided", "2:1", "knl", psia)
+        b = run(tech, "one_sided", "2:1", "xeon", psia)
+        assert a.T_loop == pytest.approx(b.T_loop, rel=0.05), tech
+
+
+def test_two_sided_sensitive_to_master_placement(psia):
+    """Two_Sided SS degrades >50% moving the master from Xeon to KNL."""
+    knl = run("ss", "two_sided", "2:1", "knl", psia)
+    xeon = run("ss", "two_sided", "2:1", "xeon", psia)
+    assert knl.T_loop > 1.5 * xeon.T_loop
+
+
+def test_wf_least_sensitive_among_techniques(psia):
+    """Paper 2nd observation: factoring-based WF barely reacts to placement."""
+    def sensitivity(tech):
+        knl = run(tech, "two_sided", "2:1", "knl", psia)
+        xeon = run(tech, "two_sided", "2:1", "xeon", psia)
+        return knl.T_loop / xeon.T_loop
+
+    assert sensitivity("wf") < sensitivity("ss")
+    assert sensitivity("wf") < 1.25
+
+
+def test_more_xeons_help_one_sided(psia):
+    """Paper: 1:2 ratio cuts One_Sided SS from 109s to 68.5s."""
+    a = run("ss", "one_sided", "2:1", "knl", psia)
+    b = run("ss", "one_sided", "1:2", "knl", psia)
+    assert b.T_loop < 0.75 * a.T_loop
+
+
+def test_one_sided_claim_latency_much_lower(psia):
+    one = run("ss", "one_sided", "2:1", "knl", psia)
+    two = run("ss", "two_sided", "2:1", "knl", psia)
+    assert one.mean_claim_latency < two.mean_claim_latency / 10
+
+
+def test_partition_conserved_in_sim(psia):
+    for impl in ["one_sided", "two_sided"]:
+        r = run("fac2", impl, "2:1", "knl", psia)
+        assert r.per_pe_iters.sum() == N
+
+
+def test_ss_best_balance_worst_overhead(psia):
+    ss = run("ss", "one_sided", "2:1", "knl", psia)
+    gss = run("gss", "one_sided", "2:1", "knl", psia)
+    assert ss.cov < gss.cov  # finer chunks balance better
+    assert ss.n_claims > 50 * gss.n_claims  # at far higher scheduling cost
+
+
+# ---- Mandelbrot (paper Fig. 5, qualitative; z <- z^4 + c) ----
+
+
+def test_mandelbrot_counts_sane():
+    counts = mandelbrot_iteration_counts(width=96, ct=200)
+    assert counts.shape == (96 * 96,)
+    assert counts.max() == 200  # interior pixels hit CT
+    assert counts.min() >= 1
+    # imbalance is the point: spread is wide
+    assert counts.std() / counts.mean() > 0.5
+
+
+def test_mandelbrot_dls_beats_static_imbalance():
+    """DLS exists to fix exactly this: static split of an imbalanced loop."""
+    counts = mandelbrot_iteration_counts(width=192, ct=300).astype(np.float64)
+    costs = counts * 1e-5
+    speeds = np.ones(16)
+    static = simulate(
+        SimConfig(LoopSpec("static", N=len(costs), P=16), speeds, costs)
+    )
+    fac2 = simulate(
+        SimConfig(LoopSpec("fac2", N=len(costs), P=16), speeds, costs)
+    )
+    assert fac2.T_loop < 0.75 * static.T_loop
+    assert fac2.cov < static.cov
