@@ -16,19 +16,18 @@ import time
 
 import numpy as np
 
-from repro.core import (
-    LoopSpec, OneSidedRuntime, SimConfig, TwoSidedRuntime, simulate,
-)
-from repro.core.rma import ThreadWindow
+from repro import dls
+from repro.core import LoopSpec, SimConfig, simulate
 
 
 def bench_one_sided(n_threads=8, n=200_000):
-    spec = LoopSpec("ss", N=n, P=n_threads)
-    rt = OneSidedRuntime(spec, ThreadWindow())
+    # record_metrics=False: the session claim is the raw runtime claim
+    # (overhead parity with the pre-facade benchmark numbers).
+    session = dls.loop(n, technique="ss", P=n_threads, record_metrics=False)
     t0 = time.perf_counter()
 
     def worker(pe):
-        while rt.claim(pe) is not None:
+        while session.claim(pe) is not None:
             pass
 
     ts = [threading.Thread(target=worker, args=(j,)) for j in range(n_threads)]
@@ -39,8 +38,9 @@ def bench_one_sided(n_threads=8, n=200_000):
 
 
 def bench_two_sided(n_threads=8, n=200_000):
-    spec = LoopSpec("ss", N=n, P=n_threads)
-    rt = TwoSidedRuntime(spec)
+    session = dls.loop(n, technique="ss", P=n_threads, runtime="two_sided",
+                       record_metrics=False)
+    rt = session.runtime  # queue protocol: dedicated master serving claims
     t0 = time.perf_counter()
     stop = threading.Event()
 

@@ -19,7 +19,8 @@ import time
 
 import numpy as np
 
-from repro.core import LoopSpec, run_threaded_one_sided, weights_from_speeds
+from repro import dls
+from repro.core import weights_from_speeds
 from repro.kernels import mandelbrot
 
 TILE = 8  # rows per scheduled iteration (fixed shape -> one jit compile)
@@ -50,11 +51,11 @@ def main():
 
     # ---- real render, really DLS-scheduled over threads ----------------
     t0 = time.perf_counter()
-    claims = run_threaded_one_sided(
-        LoopSpec("fac2", N=n_tiles, P=P),
-        lambda a, b: [render_tile(t) for t in range(a, b)],
-        n_threads=P)
-    print(f"rendered {W}x{W} via {len(claims)} one-sided claims "
+    with dls.loop(n_tiles, technique="fac2", P=P) as session:
+        render_report = session.execute(
+            lambda a, b: [render_tile(t) for t in range(a, b)],
+            executor="threads")
+    print(f"rendered {W}x{W} via {render_report.steps} one-sided claims "
           f"in {time.perf_counter()-t0:.1f}s (8 threads, 1 core)")
     assert img.max() == ct, "interior pixels must hit CT"
     with open(args.out, "wb") as f:
@@ -64,8 +65,6 @@ def main():
 
     # ---- balance on the heterogeneous cluster (DES over REAL tile costs) --
     # per-tile cost = actual escape-iteration work from the rendered image
-    from repro.core import SimConfig, simulate
-
     tile_iters = img.reshape(n_tiles, -1).sum(axis=1).astype(np.float64)
     costs = tile_iters / tile_iters.mean() * 0.1  # ~0.1 s mean per tile
     print(f"tile cost spread: min={costs.min():.3f}s max={costs.max():.3f}s "
@@ -73,11 +72,11 @@ def main():
     results = {}
     for tech in ["static", "ss", "fac2", "gss", "wf"]:
         w = tuple(weights_from_speeds(speeds)) if tech == "wf" else None
-        spec = LoopSpec(tech, N=n_tiles, P=P, weights=w)
-        r = simulate(SimConfig(spec, speeds, costs, impl="one_sided"))
-        results[tech] = r.T_loop
-        print(f"{tech:7s}: T_loop={r.T_loop:6.2f}s cov={r.cov:5.3f} "
-              f"chunks={r.n_claims:4d}")
+        r = dls.loop(n_tiles, technique=tech, P=P, weights=w).execute(
+            None, executor="sim", costs=costs, speeds=speeds)
+        results[tech] = r.wall_time
+        print(f"{tech:7s}: T_loop={r.wall_time:6.2f}s cov={r.cov:5.3f} "
+              f"chunks={r.steps:4d}")
     for tech in ["ss", "fac2", "gss", "wf"]:
         print(f"# {tech} vs static: {results[tech]/results['static']:.2f}x")
 

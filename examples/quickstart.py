@@ -9,7 +9,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import LoopSpec, chunk_series_recurrence, plan, run_threaded_one_sided
+from repro import dls
+from repro.core import LoopSpec, chunk_series_recurrence, plan
 
 # -- 1. chunk calculus ------------------------------------------------------
 spec = LoopSpec("gss", N=10, P=2)
@@ -24,12 +25,13 @@ print(f"FAC2 closed-form steps: {len(plan(spec)[0])}, "
 # -- 2. one-sided distributed claiming --------------------------------------
 N = 50_000
 executed = np.zeros(N, np.int32)
-claims = run_threaded_one_sided(
-    LoopSpec("fac2", N=N, P=8),
-    lambda a, b: executed.__setitem__(slice(a, b), executed[a:b] + 1),
-    n_threads=8)
+with dls.loop(N, technique="fac2", P=8) as session:
+    report = session.execute(
+        lambda a, b: executed.__setitem__(slice(a, b), executed[a:b] + 1),
+        executor="threads")
 assert (executed == 1).all(), "not a partition!"
-print(f"one-sided threads: {len(claims)} claims partition [0,{N}) exactly once")
+print(f"one-sided threads: {report.steps} claims partition [0,{N}) exactly "
+      f"once (cov={report.cov:.2f})")
 
 # -- 3. train a tiny LM with the DLS data plane ------------------------------
 from repro.configs.base import ModelConfig

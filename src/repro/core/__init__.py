@@ -6,6 +6,10 @@ Layers:
   scheduler      -- One_Sided / Two_Sided runtimes over threads or hosts
   weights        -- WF static weights + AWF adaptive reweighting (stragglers)
   sim            -- discrete-event simulator (paper Fig. 4/5 reproduction)
+
+Consumers should go through the ``repro.dls`` session facade (DESIGN.md);
+this package is the implementation layer.  ``run_threaded_*`` remain here
+only as deprecation shims over ``repro.dls``.
 """
 from .chunk_calculus import (  # noqa: F401
     TECHNIQUES,
@@ -20,7 +24,13 @@ from .chunk_calculus import (  # noqa: F401
     scheduling_steps,
     tss_constants,
 )
-from .rma import KVStoreWindow, ThreadWindow, Window, make_window  # noqa: F401
+from .rma import (  # noqa: F401
+    KVStoreWindow,
+    SimWindow,
+    ThreadWindow,
+    Window,
+    make_window,
+)
 from .scheduler import (  # noqa: F401
     Claim,
     OneSidedRuntime,

@@ -86,17 +86,22 @@ def tss_constants(N: int, P: int, min_chunk: int = 1):
 # Closed forms (paper Eq. 1-3).  Pure functions of the step index i.
 # ---------------------------------------------------------------------------
 
-def chunk_size_closed(spec: LoopSpec, i: int, pe: int = 0) -> int:
+def chunk_size_closed(spec: LoopSpec, i: int, pe: int = 0,
+                      weight: Optional[float] = None) -> int:
     """K'_i -- chunk size at scheduling step ``i`` (closed form, scalar).
 
     This is exactly what a PE computes in Step 2 of the paper's protocol,
     using only its private copy of ``i`` (and, for WF/AWF, its own weight).
+    ``weight`` overrides the spec's static weight for WF/AWF -- this is how
+    AWF's live, measured weights enter the closed form; it is ignored by
+    unweighted techniques.
     """
-    k = _chunk_size_closed(spec, i, pe)
+    k = _chunk_size_closed(spec, i, pe, weight)
     return min(k, spec.max_chunk) if spec.max_chunk else k
 
 
-def _chunk_size_closed(spec: LoopSpec, i: int, pe: int = 0) -> int:
+def _chunk_size_closed(spec: LoopSpec, i: int, pe: int = 0,
+                       weight: Optional[float] = None) -> int:
     t, N, P = spec.technique, spec.N, spec.P
     if t == "static":
         return int(math.ceil(N / P))
@@ -115,10 +120,12 @@ def _chunk_size_closed(spec: LoopSpec, i: int, pe: int = 0) -> int:
         return max(int(math.ceil(0.5 ** b * N / P)), spec.min_chunk)
     if t in ("wf", "awf"):
         # WF inherits the transformed FAC2 function, scaled by the claimer's
-        # relative weight (paper Table 2 last row).
+        # relative weight (paper Table 2 last row).  AWF is the same form
+        # with the live measured weight substituted for the static one.
+        w = spec.weight(pe) if weight is None else weight
         b = i // P + 1
         base = 0.5 ** b * N / P
-        return max(int(math.ceil(spec.weight(pe) * base)), spec.min_chunk)
+        return max(int(math.ceil(w * base)), spec.min_chunk)
     if t == "tfss":
         # TFSS (Chronopoulos 2005): batches of P chunks, each the mean of the
         # TSS chunks of that batch -- closed form via the TSS linear ramp.

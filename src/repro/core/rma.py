@@ -81,6 +81,32 @@ class ThreadWindow(Window):
             self._v[key] = value
 
 
+class SimWindow(ThreadWindow):
+    """Clocked window for deterministic overhead accounting.
+
+    Functionally a ``ThreadWindow``, but every RMW advances a virtual clock
+    by ``o_rma`` seconds (the window is the serialization point, as in the
+    paper's Sec. 5 Lock-Polling observation) and is counted.  Lets sessions
+    report modeled coordination cost (``clock``) without wall-clock noise;
+    the full contention/fairness model lives in ``core/sim.py``.
+    """
+
+    def __init__(self, initial: Optional[Dict[str, int]] = None,
+                 o_rma: float = 2e-6):
+        super().__init__(initial)
+        self.o_rma = o_rma
+        self.clock = 0.0
+        self.n_rmw = 0
+
+    def fetch_add(self, key: str, delta: int) -> int:
+        with self._lock:
+            old = self._v.get(key, 0)
+            self._v[key] = old + delta
+            self.n_rmw += 1
+            self.clock += self.o_rma
+            return old
+
+
 class KVStoreWindow(Window):
     """Multi-host window over the JAX coordination service.
 
@@ -100,8 +126,27 @@ class KVStoreWindow(Window):
                 "KVStoreWindow requires jax.distributed.initialize(); "
                 "use ThreadWindow for single-host runs."
             )
+        if not hasattr(state.client, "key_value_increment"):
+            # Older jaxlib coordination clients expose only get/set -- there
+            # is no atomic RMW to build a correct window on.
+            raise RuntimeError(
+                "this jax version's coordination client has no "
+                "key_value_increment (atomic fetch-add); KVStoreWindow is "
+                "unavailable -- use ThreadWindow or upgrade jax."
+            )
         self._client = state.client
         self._ns = namespace
+
+    @staticmethod
+    def available() -> bool:
+        """True if the running jax exposes the atomic-increment primitive."""
+        try:
+            from jax._src.lib import xla_extension
+
+            return hasattr(xla_extension.DistributedRuntimeClient,
+                           "key_value_increment")
+        except Exception:
+            return False
 
     def _k(self, key: str) -> str:
         return f"{self._ns}/{key}"
@@ -128,6 +173,8 @@ def make_window(backend: str = "auto", **kw) -> Window:
         return ThreadWindow(**kw)
     if backend == "kvstore":
         return KVStoreWindow(**kw)
+    if backend == "sim":
+        return SimWindow(**kw)
     if backend == "auto":
         try:
             return KVStoreWindow(**kw)

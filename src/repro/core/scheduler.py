@@ -12,6 +12,13 @@
 compares against: a (non-dedicated) master owns the Table-2 recurrence and
 serves claims one at a time from a request queue.
 
+Both implement the ``repro.dls`` Runtime contract -- ``claim(pe, weight=)``,
+``remaining_lower_bound()``, ``drained()``, ``state()``/``restore()`` -- so
+the ``DLSession`` facade can drive either interchangeably (see DESIGN.md).
+Prefer constructing them through ``repro.dls.loop(...)``; the threaded
+``run_threaded_*`` helpers below are deprecated shims over
+``DLSession.execute(..., executor="threads")``.
+
 Both run over real threads (in-process "PEs") or over hosts (KVStoreWindow);
 the discrete-event simulator in ``sim.py`` has its own clocked versions of
 both protocols for the paper's heterogeneous-cluster experiments.
@@ -21,8 +28,9 @@ from __future__ import annotations
 import itertools
 import queue
 import threading
+import warnings
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 from . import chunk_calculus as cc
 from .rma import ThreadWindow, Window
@@ -65,17 +73,7 @@ class OneSidedRuntime:
         if self.window.read(self._kl) >= N:
             return None
         i = self.window.fetch_add(self._ki, 1)  # Step 1
-        if weight is not None and self.spec.technique in cc.WEIGHTED:
-            # AWF: live weight overrides the spec's static one.  The closed
-            # form is the WF/FAC2 expression scaled by the claimer's weight.
-            import math
-
-            spec = self.spec
-            b = i // spec.P + 1
-            base = 0.5 ** b * spec.N / spec.P
-            k = max(int(math.ceil(weight * base)), spec.min_chunk)
-        else:
-            k = cc.chunk_size_closed(self.spec, i, pe)  # Step 2 (local)
+        k = cc.chunk_size_closed(self.spec, i, pe, weight=weight)  # Step 2 (local)
         start = self.window.fetch_add(self._kl, k)  # Step 3
         if start >= N:
             return None
@@ -84,14 +82,28 @@ class OneSidedRuntime:
     def remaining_lower_bound(self) -> int:
         return max(self.spec.N - self.window.read(self._kl), 0)
 
+    def drained(self) -> bool:
+        """True once the loop pointer has passed N: no PE can claim work."""
+        return self.remaining_lower_bound() == 0
+
+    # -- checkpointable window counters (i, lp_start) ----------------------
+    def state(self) -> Dict[str, int]:
+        return {"i": self.window.read(self._ki), "lp": self.window.read(self._kl)}
+
+    def restore(self, st: Dict[str, int]) -> None:
+        self.window.reset(self._ki, st["i"])
+        self.window.reset(self._kl, st["lp"])
+
 
 class TwoSidedRuntime:
     """Master-worker baseline: a master thread serves the Table-2 recurrence.
 
     Workers put (pe, reply_queue) requests on a queue; the master pops one at
     a time, advances the recurrence state (R, K_prev), and replies.  The
-    master is *non-dedicated*: ``master_work`` lets the owning thread also
-    execute loop chunks (the paper's setup) -- see ``run_threaded``.
+    master is *non-dedicated*: it can also execute loop chunks (the paper's
+    setup) -- see ``repro.dls.executors``.  ``claim`` is the synchronous
+    master-inline form of the same recurrence (the Runtime contract); the
+    queue path (``request``/``serve_*``) is the threaded protocol.
     """
 
     _SHUTDOWN = object()
@@ -109,7 +121,7 @@ class TwoSidedRuntime:
         )
 
     # -- master-side recurrence (one claim), mirrors chunk_series_recurrence --
-    def _next_chunk(self, pe: int) -> Optional[Claim]:
+    def claim(self, pe: int = 0, weight: Optional[float] = None) -> Optional[Claim]:
         import math
 
         spec = self.spec
@@ -134,7 +146,8 @@ class TwoSidedRuntime:
                     self._batch_base = max(int(math.ceil(R / (2.0 * P))), spec.min_chunk)
                 k = self._batch_base
                 if t in cc.WEIGHTED:
-                    k = max(int(math.ceil(spec.weight(pe) * self._batch_base)), spec.min_chunk)
+                    w = spec.weight(pe) if weight is None else weight
+                    k = max(int(math.ceil(w * self._batch_base)), spec.min_chunk)
             elif t == "tfss":
                 if i % P == 0:
                     first = self._K0 - i * self._C
@@ -143,16 +156,59 @@ class TwoSidedRuntime:
                 k = self._batch_base
             else:
                 raise AssertionError(t)
+            if spec.max_chunk:
+                k = min(k, spec.max_chunk)
             k = min(k, R)
             start = spec.N - self._R
             self._R -= k
             self._i += 1
             return Claim(step=i, start=start, size=k)
 
+    # Backwards-compatible private alias (older call sites / tests).
+    _next_chunk = claim
+
+    def remaining_lower_bound(self) -> int:
+        with self._lock:
+            return max(self._R, 0)
+
+    def drained(self) -> bool:
+        return self.remaining_lower_bound() == 0
+
+    def state(self) -> Dict[str, int]:
+        with self._lock:
+            return {"i": self._i, "lp": self.spec.N - self._R}
+
+    def restore(self, st: Dict[str, int]) -> None:
+        import math
+
+        spec = self.spec
+        with self._lock:
+            self._i = i = st["i"]
+            self._R = spec.N - st["lp"]
+            # Re-derive the recurrence state: the master's (_k_tss,
+            # _batch_base) are history-dependent, so a restored runtime must
+            # rebuild them or the next claim crashes / continues a stale
+            # ramp.  TSS/TFSS are exact (index-only); FAC2/WF/AWF mid-batch
+            # use the *current* remainder (the batch-start remainder is not
+            # recoverable from (i, lp) alone) -- the partition property is
+            # unaffected, only the in-flight batch's size may differ from an
+            # uninterrupted run.
+            self._k_tss = (
+                None if i == 0 else max(self._K0 - (i - 1) * self._C, self._Klast))
+            if i % spec.P == 0:
+                self._batch_base = None  # recomputed at the next batch start
+            elif spec.technique == "tfss":
+                first = self._K0 - (i - i % spec.P) * self._C
+                mean = first - (spec.P - 1) / 2.0 * self._C
+                self._batch_base = max(int(math.ceil(mean)), self._Klast)
+            else:
+                self._batch_base = max(
+                    int(math.ceil(max(self._R, 0) / (2.0 * spec.P))), spec.min_chunk)
+
     # -- two-sided protocol --
-    def request(self, pe: int) -> "queue.Queue":
+    def request(self, pe: int, weight: Optional[float] = None) -> "queue.Queue":
         reply: "queue.Queue" = queue.Queue(maxsize=1)
-        self._req.put((pe, reply))
+        self._req.put((pe, weight, reply))
         return reply
 
     def serve_pending(self, limit: Optional[int] = None) -> int:
@@ -165,8 +221,8 @@ class TwoSidedRuntime:
                 break
             if item is self._SHUTDOWN:
                 break
-            pe, reply = item
-            reply.put(self._next_chunk(pe))
+            pe, weight, reply = item
+            reply.put(self.claim(pe, weight=weight))
             served += 1
         return served
 
@@ -178,9 +234,14 @@ class TwoSidedRuntime:
             return False
         if item is self._SHUTDOWN:
             return False
-        pe, reply = item
-        reply.put(self._next_chunk(pe))
+        pe, weight, reply = item
+        reply.put(self.claim(pe, weight=weight))
         return True
+
+
+# ---------------------------------------------------------------------------
+# Deprecated threaded helpers -- thin shims over the repro.dls facade.
+# ---------------------------------------------------------------------------
 
 
 def run_threaded_one_sided(
@@ -190,32 +251,23 @@ def run_threaded_one_sided(
     window: Optional[Window] = None,
     weight_fn: Optional[Callable[[int], float]] = None,
 ) -> List[Claim]:
-    """Execute a real loop with the one-sided protocol over threads.
+    """Deprecated: use ``repro.dls.loop(...).execute(..., executor="threads")``.
 
+    Execute a real loop with the one-sided protocol over threads.
     ``work_fn(start, stop)`` executes iterations [start, stop).  Returns all
     claims (the partition of [0, N)).  ``weight_fn(pe)`` supplies live AWF
     weights.
     """
-    n_threads = n_threads or spec.P
-    rt = OneSidedRuntime(spec, window)
-    claims: List[List[Claim]] = [[] for _ in range(n_threads)]
+    warnings.warn(
+        "run_threaded_one_sided is deprecated; use "
+        "repro.dls.loop(...).execute(work_fn, executor='threads')",
+        DeprecationWarning, stacklevel=2)
+    from repro.dls import CallableWeights, DLSession
 
-    def worker(pe: int):
-        while True:
-            w = weight_fn(pe) if weight_fn is not None else None
-            c = rt.claim(pe, weight=w)
-            if c is None:
-                return
-            work_fn(c.start, c.stop)
-            claims[pe].append(c)
-
-    threads = [threading.Thread(target=worker, args=(j,), name=f"dls-{j}")
-               for j in range(n_threads)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    return [c for per in claims for c in per]
+    session = DLSession(
+        spec, OneSidedRuntime(spec, window),
+        weights=CallableWeights(weight_fn) if weight_fn is not None else None)
+    return session.execute(work_fn, executor="threads", n_threads=n_threads).claims
 
 
 def run_threaded_two_sided(
@@ -224,55 +276,17 @@ def run_threaded_two_sided(
     n_threads: Optional[int] = None,
     master_pe: int = 0,
 ) -> List[Claim]:
-    """Master-worker execution: PE ``master_pe`` is the non-dedicated master.
+    """Deprecated: use ``repro.dls.loop(..., runtime="two_sided").execute(...)``.
 
-    The master interleaves serving requests with executing its own chunks
-    (checks the queue between chunks, like the LB tool's breakAfter).
+    Master-worker execution: PE ``master_pe`` is the non-dedicated master.
     """
-    n_threads = n_threads or spec.P
-    rt = TwoSidedRuntime(spec)
-    claims: List[List[Claim]] = [[] for _ in range(n_threads)]
-    done = threading.Event()
+    warnings.warn(
+        "run_threaded_two_sided is deprecated; use "
+        "repro.dls.loop(..., runtime='two_sided').execute(work_fn, executor='threads')",
+        DeprecationWarning, stacklevel=2)
+    from repro.dls import DLSession
 
-    def worker(pe: int):
-        while True:
-            reply = rt.request(pe)
-            c = reply.get()
-            if c is None:
-                return
-            work_fn(c.start, c.stop)
-            claims[pe].append(c)
-
-    def master():
-        my_claim: Optional[Claim] = None
-        workers_live = True
-        while True:
-            rt.serve_pending()
-            if my_claim is None:
-                my_claim = rt._next_chunk(master_pe)
-                if my_claim is None:
-                    # loop exhausted: keep serving until workers drain
-                    while not done.is_set():
-                        if not rt.serve_blocking(timeout=0.01):
-                            if done.is_set():
-                                break
-                    rt.serve_pending()
-                    return
-            work_fn(my_claim.start, my_claim.stop)
-            claims[master_pe].append(my_claim)
-            my_claim = None
-
-    threads = [
-        threading.Thread(target=worker, args=(j,), name=f"dls-{j}")
-        for j in range(n_threads)
-        if j != master_pe
-    ]
-    mt = threading.Thread(target=master)
-    for t in threads:
-        t.start()
-    mt.start()
-    for t in threads:
-        t.join()
-    done.set()
-    mt.join()
-    return [c for per in claims for c in per]
+    session = DLSession(spec, TwoSidedRuntime(spec))
+    return session.execute(
+        work_fn, executor="threads", n_threads=n_threads, master_pe=master_pe
+    ).claims

@@ -4,7 +4,8 @@ paper's one-sided protocol instead of a fixed striped split.
 Why this matters at 1000+-node scale: with a *static* split (host h gets
 indices h::H), one slow or restarted host stalls the whole data-parallel
 step.  With DLS claiming, hosts pull variable-size chunks of the global
-index space through two atomic fetch-adds (OneSidedRuntime); slow hosts
+index space through two atomic fetch-adds (a one-sided ``repro.dls``
+session); slow hosts
 simply claim less, dead hosts claim nothing, and restarted hosts resume from
 the *current* loop pointer -- the window counters (i, lp_start) are part of
 the checkpoint, so a restart continues the epoch exactly where it stopped.
@@ -25,7 +26,8 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-from repro.core import LoopSpec, OneSidedRuntime, ThreadWindow, Window
+from repro import dls
+from repro.core import ThreadWindow, Window
 from repro.core.weights import WeightBoard
 
 
@@ -83,16 +85,18 @@ class DLSSampler:
         self._ranges: list = []
         self._buffered = 0
         self._epoch = epoch
-        self._new_epoch_runtime()
+        self._new_epoch_session()
 
-    def _new_epoch_runtime(self):
-        spec = LoopSpec(
-            self.technique, N=self.n_samples, P=self.n_hosts,
-            min_chunk=self.min_chunk, max_chunk=self.max_chunk,
-        )
+    def _new_epoch_session(self):
         # namespace by epoch so monotonic KV windows work across epochs
-        self.runtime = OneSidedRuntime(
-            spec, self.window, loop_id=hash(("epoch", self._epoch)) & 0x7FFFFFFF)
+        # (the weight board only acts for wf/awf -- don't attach a no-op
+        # policy, and don't warn, for the unweighted techniques)
+        board = self.board if self.technique in dls.WEIGHTED else None
+        self.session = dls.loop(
+            self.n_samples, technique=self.technique, P=self.n_hosts,
+            window=self.window, min_chunk=self.min_chunk,
+            max_chunk=self.max_chunk, weights=board,
+            loop_id=hash(("epoch", self._epoch)) & 0x7FFFFFFF)
 
     @property
     def epoch(self) -> int:
@@ -103,14 +107,13 @@ class DLSSampler:
             self._epoch += 1
             self._ranges = []
             self._buffered = 0
-            self._new_epoch_runtime()
+            self._new_epoch_session()
 
     def claim_batch(self, batch_size: int) -> Optional[np.ndarray]:
         """Claim until ``batch_size`` indices are buffered; None = exhausted."""
         with self._lock:
             while self._buffered < batch_size:
-                w = self.board.weight(self.host_id) if self.board is not None else None
-                c = self.runtime.claim(self.host_id, weight=w)
+                c = self.session.claim(self.host_id)
                 if c is None:
                     return None  # epoch drained (leftovers < batch: dropped)
                 self._ranges.append((c.start, c.stop))
@@ -132,10 +135,11 @@ class DLSSampler:
     # ---- checkpointable state ----
     def state(self) -> EpochState:
         with self._lock:
+            counters = self.session.state()
             return EpochState(
                 epoch=self._epoch,
-                next_step_i=self.window.read(self.runtime._ki),
-                next_lp=self.window.read(self.runtime._kl),
+                next_step_i=counters["i"],
+                next_lp=counters["lp"],
                 leftover=[list(r) for r in self._ranges],
             )
 
@@ -144,9 +148,8 @@ class DLSSampler:
             self._epoch = st.epoch
             self._ranges = [tuple(r) for r in st.leftover]
             self._buffered = sum(e - s for s, e in self._ranges)
-            self._new_epoch_runtime()
-            self.window.reset(self.runtime._ki, st.next_step_i)
-            self.window.reset(self.runtime._kl, st.next_lp)
+            self._new_epoch_session()
+            self.session.restore({"i": st.next_step_i, "lp": st.next_lp})
 
 
 class HostDataIterator:

@@ -1,0 +1,61 @@
+"""repro.dls -- the public facade for dynamic loop self-scheduling.
+
+One composable session API over the paper's machinery (see DESIGN.md):
+
+    from repro import dls
+
+    session = dls.loop(1_000_000, technique="awf", P=288,
+                       runtime="one_sided", window="auto", weights="awf")
+    report = session.execute(work_fn, executor="threads")
+    print(report.summary())  # steps, chunk sizes, per-PE busy, c.o.v.
+
+Layers behind the facade (all swappable):
+  Runtime      -- one_sided (two atomic fetch-adds, paper Sec. 3) or
+                  two_sided (master-worker baseline)
+  Window       -- thread | kvstore | sim | auto (repro.core.rma)
+  WeightPolicy -- uniform | static WF | adaptive AWF
+  Executor     -- serial | threads | sim
+
+``repro.core``'s ``run_threaded_*`` helpers remain as deprecation shims
+over this package.
+"""
+from repro.core.chunk_calculus import (  # noqa: F401  (re-exported surface)
+    TECHNIQUES,
+    WEIGHTED,
+    LoopSpec,
+)
+from repro.core.scheduler import Claim  # noqa: F401
+
+from .executors import EXECUTORS, execute  # noqa: F401
+from .policies import (  # noqa: F401
+    AdaptiveWeights,
+    CallableWeights,
+    StaticWeights,
+    UniformWeights,
+    WeightPolicy,
+    make_weight_policy,
+)
+from .report import SessionReport  # noqa: F401
+from .runtime import RUNTIMES, Runtime, make_runtime  # noqa: F401
+from .session import DLSession, loop  # noqa: F401
+
+__all__ = [
+    "AdaptiveWeights",
+    "CallableWeights",
+    "Claim",
+    "DLSession",
+    "EXECUTORS",
+    "LoopSpec",
+    "RUNTIMES",
+    "Runtime",
+    "SessionReport",
+    "StaticWeights",
+    "TECHNIQUES",
+    "UniformWeights",
+    "WEIGHTED",
+    "WeightPolicy",
+    "execute",
+    "loop",
+    "make_runtime",
+    "make_weight_policy",
+]

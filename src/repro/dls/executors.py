@@ -1,0 +1,175 @@
+"""Pluggable executors: how a session's claims actually get executed.
+
+Three built-ins, all draining a ``DLSession`` to completion and returning a
+``SessionReport``:
+
+  * ``serial``  -- round-robin claims on the calling thread.  Deterministic;
+    the reference executor for tests and planners.
+  * ``threads`` -- real concurrency, one thread per PE.  One-sided runtimes
+    claim independently (the paper's protocol); two-sided runtimes run the
+    non-dedicated master-worker protocol (master interleaves serving the
+    request queue with its own chunks).
+  * ``sim``     -- the discrete-event simulator (``core/sim.py``): no real
+    execution; pass per-iteration ``costs`` and per-PE ``speeds``.  This is
+    how the paper's heterogeneous-cluster experiments run.
+
+``work_fn(start, stop)`` executes iterations ``[start, stop)``.  Executors
+time every chunk and feed ``session.record`` so AWF weights and the
+busy-time metrics see the same signal.  See DESIGN.md Sec. 4.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.scheduler import Claim, TwoSidedRuntime
+
+EXECUTORS = ("serial", "threads", "sim")
+
+WorkFn = Callable[[int, int], None]
+
+
+def execute(session, work_fn: Optional[WorkFn], executor: str = "threads",
+            **kw):
+    if executor == "serial":
+        return _serial(session, work_fn, **kw)
+    if executor == "threads":
+        if isinstance(session.runtime, TwoSidedRuntime):
+            return _threads_two_sided(session, work_fn, **kw)
+        return _threads_one_sided(session, work_fn, **kw)
+    if executor == "sim":
+        return _sim(session, **kw)
+    raise ValueError(f"unknown executor {executor!r}; pick from {EXECUTORS}")
+
+
+def _run_chunk(session, pe: int, c: Claim, work_fn: Optional[WorkFn]) -> None:
+    t0 = time.perf_counter()
+    if work_fn is not None:
+        work_fn(c.start, c.stop)
+    session.record(pe, c.size, time.perf_counter() - t0)
+
+
+def _serial(session, work_fn: Optional[WorkFn]):
+    """Round-robin over the spec's P logical PEs, one claim at a time."""
+    P = session.spec.P
+    t0 = time.perf_counter()
+    pe = 0
+    while True:
+        c = session.claim(pe)
+        if c is None:
+            # Both runtimes only return None once the whole loop is claimed,
+            # so a single None ends the drain for every PE.
+            break
+        _run_chunk(session, pe, c, work_fn)
+        pe = (pe + 1) % P
+    return session.report("serial", wall_time=time.perf_counter() - t0)
+
+
+def _threads_one_sided(session, work_fn: Optional[WorkFn],
+                       n_threads: Optional[int] = None):
+    """The paper's execution model: every PE claims for itself, no master."""
+    n_threads = n_threads or session.spec.P
+    t0 = time.perf_counter()
+
+    def worker(pe: int):
+        while True:
+            c = session.claim(pe)
+            if c is None:
+                return
+            _run_chunk(session, pe, c, work_fn)
+
+    threads = [threading.Thread(target=worker, args=(j,), name=f"dls-{j}")
+               for j in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return session.report("threads", wall_time=time.perf_counter() - t0)
+
+
+def _threads_two_sided(session, work_fn: Optional[WorkFn],
+                       n_threads: Optional[int] = None, master_pe: int = 0):
+    """Master-worker execution: PE ``master_pe`` is the non-dedicated master.
+
+    The master interleaves serving requests with executing its own chunks
+    (checks the queue between chunks, like the LB tool's breakAfter).
+    """
+    rt: TwoSidedRuntime = session.runtime
+    n_threads = n_threads or session.spec.P
+    done = threading.Event()
+    t0 = time.perf_counter()
+
+    def worker(pe: int):
+        while True:
+            reply = rt.request(pe, weight=session.policy.weight(pe))
+            c = reply.get()
+            if c is None:
+                return
+            session.log_claim(pe, c)
+            _run_chunk(session, pe, c, work_fn)
+
+    def master():
+        my_claim: Optional[Claim] = None
+        while True:
+            rt.serve_pending()
+            if my_claim is None:
+                my_claim = session.claim(master_pe)
+                if my_claim is None:
+                    # loop exhausted: keep serving until workers drain
+                    while not done.is_set():
+                        if not rt.serve_blocking(timeout=0.01):
+                            if done.is_set():
+                                break
+                    rt.serve_pending()
+                    return
+            _run_chunk(session, master_pe, my_claim, work_fn)
+            my_claim = None
+
+    threads = [
+        threading.Thread(target=worker, args=(j,), name=f"dls-{j}")
+        for j in range(n_threads)
+        if j != master_pe
+    ]
+    mt = threading.Thread(target=master)
+    for t in threads:
+        t.start()
+    mt.start()
+    for t in threads:
+        t.join()
+    done.set()
+    mt.join()
+    return session.report("threads", wall_time=time.perf_counter() - t0)
+
+
+def _sim(session, costs=None, speeds=None, **sim_kw):
+    """Discrete-event simulation of this session's spec (no real execution).
+
+    ``costs``: per-iteration execution cost (length N, seconds at speed 1);
+    ``speeds``: per-PE relative speed (length P, defaults to homogeneous).
+    Wall time in the returned report is the *virtual* ``T_p^loop``.
+    """
+    from repro.core.sim import SimConfig, simulate
+    from .report import SessionReport
+
+    spec = session.spec
+    if costs is None:
+        raise ValueError("executor='sim' needs per-iteration costs=")
+    if speeds is None:
+        speeds = np.ones(spec.P)
+    r = simulate(SimConfig(spec, np.asarray(speeds), np.asarray(costs),
+                           impl=session.runtime_kind, **sim_kw))
+    return SessionReport(
+        technique=spec.technique,
+        N=spec.N,
+        P=spec.P,
+        runtime=session.runtime_kind,
+        executor="sim",
+        per_pe_claims=[[] for _ in range(spec.P)],  # DES logs counts, not claims
+        per_pe_iters=np.asarray(r.per_pe_iters, dtype=np.int64),
+        busy_time=np.asarray(r.finish, dtype=np.float64),
+        wall_time=float(r.T_loop),
+        n_claims=r.n_claims,
+    )

@@ -1,0 +1,117 @@
+"""Weight policies: who gets how much of the loop, per claim.
+
+The paper's WF scales the FAC2 closed form by a *static* per-PE weight;
+its cited AWF follow-up makes the weight a *measured* quantity.  A
+``WeightPolicy`` decouples that choice from the runtimes: the session asks
+the policy for the claimer's weight on every claim and feeds execution
+timings back through ``record``.  ``weight() -> None`` means "no override"
+-- the closed form then falls back to ``LoopSpec.weights`` (static WF) or
+1.0 (uniform).  See DESIGN.md Sec. 3.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Union
+
+try:  # Protocol is 3.8+; keep a soft fallback for exotic interpreters
+    from typing import Protocol, runtime_checkable
+except ImportError:  # pragma: no cover
+    Protocol = object  # type: ignore
+
+    def runtime_checkable(cls):  # type: ignore
+        return cls
+
+from repro.core.weights import WeightBoard
+
+
+@runtime_checkable
+class WeightPolicy(Protocol):
+    """Per-claim weight source + throughput feedback sink."""
+
+    def weight(self, pe: int) -> Optional[float]:
+        """Weight override for PE ``pe``'s next claim; None = use the spec."""
+        ...
+
+    def record(self, pe: int, iters: int, seconds: float) -> None:
+        """Feed back observed execution (no-op for static policies)."""
+        ...
+
+
+class UniformWeights:
+    """No override: every PE gets the spec's static weight (or 1.0)."""
+
+    def weight(self, pe: int) -> Optional[float]:
+        return None
+
+    def record(self, pe: int, iters: int, seconds: float) -> None:
+        pass
+
+
+class StaticWeights:
+    """Fixed relative weights (the paper's WF), e.g. from core speeds."""
+
+    def __init__(self, weights: Sequence[float]):
+        self._w = [float(w) for w in weights]
+
+    def weight(self, pe: int) -> Optional[float]:
+        return self._w[pe]
+
+    def record(self, pe: int, iters: int, seconds: float) -> None:
+        pass
+
+
+class AdaptiveWeights:
+    """AWF: live weights from a ``WeightBoard`` EMA of measured throughput."""
+
+    def __init__(self, board: WeightBoard):
+        self.board = board
+
+    def weight(self, pe: int) -> Optional[float]:
+        return self.board.weight(pe)
+
+    def record(self, pe: int, iters: int, seconds: float) -> None:
+        self.board.record(pe, iters, seconds)
+
+
+class CallableWeights:
+    """Adapter for a plain ``pe -> weight`` callable (legacy ``weight_fn``)."""
+
+    def __init__(self, fn: Callable[[int], float]):
+        self.fn = fn
+
+    def weight(self, pe: int) -> Optional[float]:
+        return self.fn(pe)
+
+    def record(self, pe: int, iters: int, seconds: float) -> None:
+        pass
+
+
+def make_weight_policy(
+    weights: Union[None, str, WeightPolicy, WeightBoard, Sequence[float]],
+    P: int,
+) -> WeightPolicy:
+    """Coerce the ``loop(weights=...)`` argument into a policy.
+
+    Accepts None/"uniform", "awf" (fresh board), a WeightBoard, a float
+    sequence (static WF weights), or any ready-made WeightPolicy.
+    """
+    if weights is None:
+        return UniformWeights()
+    if isinstance(weights, str):
+        if weights == "uniform":
+            return UniformWeights()
+        if weights == "awf":
+            return AdaptiveWeights(WeightBoard(P))
+        raise ValueError(f"unknown weight policy {weights!r}")
+    if isinstance(weights, WeightBoard):
+        return AdaptiveWeights(weights)
+    if isinstance(weights, (UniformWeights, StaticWeights, AdaptiveWeights,
+                            CallableWeights)):
+        return weights
+    if callable(getattr(weights, "weight", None)) and callable(
+            getattr(weights, "record", None)):
+        return weights  # duck-typed WeightPolicy
+    if isinstance(weights, (list, tuple)) or hasattr(weights, "__len__"):
+        if len(weights) != P:
+            raise ValueError(f"weights must have length P={P}")
+        return StaticWeights(weights)
+    raise TypeError(f"cannot build a WeightPolicy from {weights!r}")

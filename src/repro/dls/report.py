@@ -1,0 +1,65 @@
+"""Per-session scheduling metrics (the paper's Sec. 5 measurands).
+
+Every claim a ``DLSession`` hands out is logged per PE; execution feedback
+(``session.record``) accumulates per-PE busy time.  ``SessionReport``
+aggregates both into the quantities the paper reports: number of
+scheduling steps, chunk-size series, per-PE iteration counts, and the
+load-imbalance coefficient of variation of per-PE busy/finish times.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.scheduler import Claim
+from repro.core.weights import coefficient_of_variation
+
+
+@dataclasses.dataclass
+class SessionReport:
+    """Aggregated metrics for one (possibly partial) session execution."""
+
+    technique: str
+    N: int
+    P: int
+    runtime: str  # "one_sided" | "two_sided"
+    executor: Optional[str]  # "serial" | "threads" | "sim" | None (manual)
+    per_pe_claims: List[List[Claim]]
+    per_pe_iters: np.ndarray  # iterations executed (sim) or claimed, per PE
+    busy_time: np.ndarray  # seconds of work_fn execution per PE
+    wall_time: float  # wall-clock of execute() (sim: virtual T_loop)
+    n_claims: Optional[int] = None  # overrides len(claims) (sim executor)
+
+    @property
+    def claims(self) -> List[Claim]:
+        return [c for per in self.per_pe_claims for c in per]
+
+    @property
+    def chunk_sizes(self) -> List[int]:
+        return [c.size for c in self.claims]
+
+    @property
+    def total_iters(self) -> int:
+        return int(self.per_pe_iters.sum())
+
+    @property
+    def steps(self) -> int:
+        n = len(self.claims) if self.n_claims is None else self.n_claims
+        return n
+
+    @property
+    def cov(self) -> float:
+        """Load imbalance: c.o.v. of per-PE busy time (lower = better)."""
+        if self.busy_time.sum() <= 0:
+            return 0.0
+        return coefficient_of_variation(self.busy_time)
+
+    def summary(self) -> str:
+        return (
+            f"{self.technique} N={self.N} P={self.P} [{self.runtime}"
+            f"{'/' + self.executor if self.executor else ''}] "
+            f"steps={self.steps} iters={self.total_iters} "
+            f"cov={self.cov:.3f} wall={self.wall_time:.3f}s"
+        )

@@ -1,0 +1,73 @@
+"""The Runtime contract: what a claim source must implement.
+
+Both protocol implementations in ``repro.core.scheduler`` --
+``OneSidedRuntime`` (the paper's two-fetch-add distributed chunk
+calculation) and ``TwoSidedRuntime`` (the master-worker baseline) --
+satisfy this contract, which is what lets ``DLSession`` and the executors
+treat them interchangeably.  See DESIGN.md Sec. 2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+try:
+    from typing import Protocol, runtime_checkable
+except ImportError:  # pragma: no cover
+    Protocol = object  # type: ignore
+
+    def runtime_checkable(cls):  # type: ignore
+        return cls
+
+from repro.core.chunk_calculus import LoopSpec
+from repro.core.rma import Window, make_window
+from repro.core.scheduler import Claim, OneSidedRuntime, TwoSidedRuntime
+
+RUNTIMES = ("one_sided", "two_sided")
+
+
+@runtime_checkable
+class Runtime(Protocol):
+    """A source of loop claims over a shared iteration space."""
+
+    spec: LoopSpec
+
+    def claim(self, pe: int = 0, weight: Optional[float] = None) -> Optional[Claim]:
+        """One scheduling step for ``pe``; None once the loop is exhausted."""
+        ...
+
+    def remaining_lower_bound(self) -> int:
+        """Unclaimed iterations still in the pool (0 once drained)."""
+        ...
+
+    def drained(self) -> bool:
+        """True when no PE can obtain further work."""
+        ...
+
+    def state(self) -> Dict[str, int]:
+        """Checkpointable counters (step index ``i``, loop pointer ``lp``)."""
+        ...
+
+    def restore(self, st: Dict[str, int]) -> None:
+        ...
+
+
+def make_runtime(
+    spec: LoopSpec,
+    runtime: str = "one_sided",
+    window=None,
+    loop_id: Optional[int] = None,
+) -> Runtime:
+    """Build a Runtime.  ``window`` is a backend name or a ``Window`` object
+    (shared across sessions for multi-claimer setups); two-sided runtimes
+    keep all state master-side and take no window."""
+    if runtime == "one_sided":
+        if window is None:
+            window = "thread"
+        if isinstance(window, str):
+            window = make_window(window)
+        elif not isinstance(window, Window):
+            raise TypeError(f"window must be a backend name or Window, got {window!r}")
+        return OneSidedRuntime(spec, window, loop_id=loop_id)
+    if runtime == "two_sided":
+        return TwoSidedRuntime(spec)
+    raise ValueError(f"unknown runtime {runtime!r}; pick from {RUNTIMES}")

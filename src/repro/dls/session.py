@@ -1,0 +1,240 @@
+"""DLSession: the one entry point for self-scheduled loops.
+
+A session binds a ``LoopSpec`` to a ``Runtime`` (one-sided / two-sided), a
+``WeightPolicy`` (uniform / static WF / adaptive AWF), and a metrics log,
+behind one small surface:
+
+    from repro import dls
+
+    with dls.loop(100_000, technique="fac2", P=16) as s:
+        report = s.execute(work_fn, executor="threads")
+
+    # or pipeline-style, one claim at a time:
+    for c in s.claims(pe=3):
+        consume(c.start, c.stop)
+
+Sessions are namespaced per loop (monotonic KV windows work), resettable
+(``reset()`` opens a fresh namespace on the same window), and
+checkpointable (``state()``/``restore()`` round-trip the two window
+counters).  See DESIGN.md.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import warnings
+from typing import Callable, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.chunk_calculus import WEIGHTED, LoopSpec
+from repro.core.scheduler import Claim, OneSidedRuntime
+
+from .policies import UniformWeights, WeightPolicy, make_weight_policy
+from .report import SessionReport
+from .runtime import Runtime, make_runtime
+
+_session_ids = itertools.count(1)
+
+
+class DLSession:
+    """A self-scheduling session over ``[0, N)`` (see module docstring)."""
+
+    def __init__(
+        self,
+        spec: LoopSpec,
+        runtime: Runtime,
+        *,
+        weights: Optional[WeightPolicy] = None,
+        record_metrics: bool = True,
+    ):
+        self.spec = spec
+        self.runtime = runtime
+        self.policy: WeightPolicy = weights if weights is not None else UniformWeights()
+        self.record_metrics = record_metrics
+        self.runtime_kind = (
+            "one_sided" if isinstance(runtime, OneSidedRuntime) else "two_sided")
+        self._claim_log: List[List[Claim]] = [[] for _ in range(spec.P)]
+        self._busy: List[float] = [0.0] * spec.P
+        self._grow_lock = threading.Lock()  # only for pe >= P growth
+        # Hot-path shortcut: with no weight policy and no metrics the session
+        # claim is *exactly* the runtime claim (benchmarks/overhead.py relies
+        # on per-claim overhead parity with the raw runtimes).
+        if not record_metrics and isinstance(self.policy, UniformWeights):
+            self.claim = self.runtime.claim  # type: ignore[method-assign]
+
+    # ------------------------------------------------------------------
+    # claiming
+    # ------------------------------------------------------------------
+    def claim(self, pe: int = 0, weight: Optional[float] = None) -> Optional[Claim]:
+        """One scheduling step for PE ``pe``; None once the loop is drained.
+
+        ``weight`` overrides the policy's weight for this single claim.
+        """
+        if weight is None:
+            weight = self.policy.weight(pe)
+        c = self.runtime.claim(pe, weight=weight)
+        if c is not None and self.record_metrics:
+            self._ensure_pe(pe)
+            self._claim_log[pe].append(c)
+        return c
+
+    def claims(self, pe: int = 0) -> Iterator[Claim]:
+        """Iterate this PE's claims until the loop drains (pipeline form)."""
+        while True:
+            c = self.claim(pe)
+            if c is None:
+                return
+            yield c
+
+    def log_claim(self, pe: int, c: Claim) -> None:
+        """Log a claim obtained outside ``claim()`` (two-sided queue path)."""
+        if self.record_metrics:
+            self._ensure_pe(pe)
+            self._claim_log[pe].append(c)
+
+    def record(self, pe: int, iters: int, seconds: float) -> None:
+        """Feed back observed execution: AWF weights + busy-time metrics."""
+        self.policy.record(pe, iters, seconds)
+        if self.record_metrics:
+            self._ensure_pe(pe)
+            self._busy[pe] += seconds
+
+    # ------------------------------------------------------------------
+    # drain contract
+    # ------------------------------------------------------------------
+    def remaining(self) -> int:
+        """Lower bound on unclaimed iterations (0 once drained)."""
+        return self.runtime.remaining_lower_bound()
+
+    def drained(self) -> bool:
+        return self.runtime.drained()
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+    def execute(
+        self,
+        work_fn: Optional[Callable[[int, int], None]],
+        executor: str = "threads",
+        **kw,
+    ) -> SessionReport:
+        """Drain the loop through an executor; returns a ``SessionReport``.
+
+        executor: "serial" (round-robin claims on the calling thread),
+        "threads" (real concurrency; two-sided runs the non-dedicated
+        master-worker protocol), or "sim" (discrete-event simulation --
+        pass ``costs=`` and ``speeds=`` instead of executing ``work_fn``).
+        """
+        from . import executors
+
+        return executors.execute(self, work_fn, executor=executor, **kw)
+
+    # ------------------------------------------------------------------
+    # metrics
+    # ------------------------------------------------------------------
+    def report(self, executor: Optional[str] = None,
+               wall_time: float = 0.0) -> SessionReport:
+        """Snapshot the per-claim metrics collected so far."""
+        return SessionReport(
+            technique=self.spec.technique,
+            N=self.spec.N,
+            P=self.spec.P,
+            runtime=self.runtime_kind,
+            executor=executor,
+            per_pe_claims=[list(per) for per in self._claim_log],
+            per_pe_iters=np.array(
+                [sum(c.size for c in per) for per in self._claim_log],
+                dtype=np.int64),
+            busy_time=np.asarray(self._busy, dtype=np.float64),
+            wall_time=wall_time,
+        )
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def reset(self, loop_id: Optional[int] = None) -> "DLSession":
+        """Rewind to a full loop and clear metrics.
+
+        One-sided sessions open a *fresh counter namespace* on the same
+        window (monotonic KV backends never decrement); two-sided sessions
+        rewind the master recurrence in place.
+        """
+        if isinstance(self.runtime, OneSidedRuntime):
+            self.runtime = OneSidedRuntime(
+                self.spec, self.runtime.window, loop_id=loop_id)
+        else:
+            self.runtime.restore({"i": 0, "lp": 0})
+        self._claim_log = [[] for _ in range(len(self._claim_log))]
+        self._busy = [0.0] * len(self._busy)
+        if not self.record_metrics and isinstance(self.policy, UniformWeights):
+            self.claim = self.runtime.claim  # type: ignore[method-assign]
+        return self
+
+    def state(self) -> dict:
+        """Checkpointable scheduling state (window counters i, lp)."""
+        return self.runtime.state()
+
+    def restore(self, st: dict) -> None:
+        self.runtime.restore(st)
+
+    def __enter__(self) -> "DLSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        return False
+
+    # ------------------------------------------------------------------
+    def _ensure_pe(self, pe: int) -> None:
+        if pe < len(self._claim_log):
+            return
+        with self._grow_lock:
+            while len(self._claim_log) <= pe:
+                self._claim_log.append([])
+                self._busy.append(0.0)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"DLSession({self.spec.technique!r}, N={self.spec.N}, "
+                f"P={self.spec.P}, runtime={self.runtime_kind!r})")
+
+
+def loop(
+    N: int,
+    technique: str = "fac2",
+    *,
+    P: int = 1,
+    runtime: str = "one_sided",
+    window=None,
+    weights=None,
+    min_chunk: int = 1,
+    max_chunk: Optional[int] = None,
+    loop_id: Optional[int] = None,
+    record_metrics: bool = True,
+) -> DLSession:
+    """Open a DLS session over ``[0, N)`` -- the facade's front door.
+
+    N, technique, P, min_chunk, max_chunk: the ``LoopSpec`` fields.
+    runtime: "one_sided" (paper protocol) | "two_sided" (master-worker).
+    window: "thread" | "kvstore" | "sim" | "auto" | a shared ``Window``
+        object | None (thread).  Ignored by two-sided runtimes.
+    weights: None/"uniform" | "awf" | a float sequence (static WF; also
+        stored on the spec) | a ``WeightBoard`` | a ``WeightPolicy``.
+    loop_id: explicit counter namespace (defaults to a fresh id) -- pass a
+        stable value to share one logical loop across host processes.
+    record_metrics: disable to make ``claim`` a zero-overhead passthrough.
+    """
+    spec_weights = None
+    if (weights is not None and not isinstance(weights, str)
+            and hasattr(weights, "__len__") and len(weights) == P):
+        spec_weights = tuple(float(w) for w in weights)
+    spec = LoopSpec(technique, N=N, P=P, weights=spec_weights,
+                    min_chunk=min_chunk, max_chunk=max_chunk)
+    rt = make_runtime(spec, runtime=runtime, window=window, loop_id=loop_id)
+    policy = make_weight_policy(weights, P)
+    if weights is not None and technique not in WEIGHTED \
+            and not isinstance(policy, UniformWeights):
+        warnings.warn(
+            f"technique {technique!r} ignores weights (only {WEIGHTED} use "
+            f"them); the supplied weight policy will have no effect",
+            stacklevel=2)
+    return DLSession(spec, rt, weights=policy, record_metrics=record_metrics)

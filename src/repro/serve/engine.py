@@ -3,8 +3,8 @@
 The paper's self-scheduling maps onto inference serving directly: requests
 are the loop iterations (highly variable cost -- prompt and generation
 lengths vary by orders of magnitude), decode "workers" are batch slots, and
-the shared work queue is claimed through the same one-sided protocol
-(``OneSidedRuntime``) -- no scheduler master thread serializing admissions.
+the shared work queue is claimed through the same one-sided protocol (a
+``repro.dls`` session) -- no scheduler master thread serializing admissions.
 
 ``ContinuousBatcher`` keeps a fixed-size decode batch full: whenever a slot
 finishes (EOS / max_len), it claims the next chunk of requests from the
@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LoopSpec, OneSidedRuntime, ThreadWindow
+from repro import dls
 from repro.models import api
 from repro.shard.spec import NO_SHARD
 
@@ -84,6 +84,7 @@ class ContinuousBatcher:
         self.n_workers = n_workers
         self.technique = technique
         self.min_chunk = min_chunk
+        self.last_report: Optional[dls.SessionReport] = None  # of last schedule()
 
     def schedule(
         self,
@@ -98,20 +99,21 @@ class ContinuousBatcher:
         """
         N = len(requests)
         technique = "static" if static else self.technique
-        spec = LoopSpec(technique, N=N, P=self.n_workers, min_chunk=self.min_chunk)
-        rt = OneSidedRuntime(spec, ThreadWindow())
+        session = dls.loop(N, technique=technique, P=self.n_workers,
+                           min_chunk=self.min_chunk)
         t_worker = np.zeros(self.n_workers)
         done_at = np.zeros(N)
-        while True:
+        while not session.drained():
             w = int(np.argmin(t_worker))
-            c = rt.claim(w)
+            c = session.claim(w)
             if c is None:
-                # other workers may still claim; check all
-                if all(rt.claim(i) is None for i in range(self.n_workers)):
-                    break
-                continue
+                # drained() is authoritative under the Runtime contract --
+                # no probe claims that burn scheduling steps per worker.
+                break
             chunk = requests[c.start : c.stop]
             dt = process(chunk, w)
             t_worker[w] += dt
+            session.record(w, c.size, dt)
             done_at[c.start : c.stop] = t_worker[w]
+        self.last_report = session.report(executor="admission")
         return done_at

@@ -1,8 +1,11 @@
 """Property + unit tests for the chunk calculus (paper Table 2 / Eq. 1-3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import (
     TECHNIQUES,

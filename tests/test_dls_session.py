@@ -1,0 +1,236 @@
+"""Facade tests: repro.dls sessions across technique x runtime x executor.
+
+The contract under test is the paper's partition property lifted to the
+facade: whatever the technique, runtime, and executor, the claims handed
+out by a session exactly partition [0, N) -- no gaps, no overlaps -- and
+the ``SessionReport`` accounting sums to N.
+"""
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro import dls
+from repro.core import LoopSpec, ThreadWindow, chunk_size_closed, scheduling_steps
+from repro.core.weights import WeightBoard
+
+RUNTIMES = ["one_sided", "two_sided"]
+EXECUTORS = ["serial", "threads"]
+
+
+def _assert_partition(claims, N):
+    ivals = sorted((c.start, c.stop) for c in claims)
+    assert ivals, "no claims"
+    assert ivals[0][0] == 0 and ivals[-1][1] == N
+    for (a0, b0), (a1, b1) in zip(ivals, ivals[1:]):
+        assert b0 == a1, f"gap or overlap at {b0} vs {a1}"
+
+
+@pytest.mark.parametrize("tech", dls.TECHNIQUES)
+@pytest.mark.parametrize("runtime", RUNTIMES)
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_partition_for_every_combination(tech, runtime, executor):
+    N, P = 5_000, 5
+    hits = np.zeros(N, np.int32)
+    lock = threading.Lock()
+
+    def work(a, b):
+        with lock:
+            hits[a:b] += 1
+
+    session = dls.loop(N, technique=tech, P=P, runtime=runtime)
+    report = session.execute(work, executor=executor)
+    assert (hits == 1).all(), f"{tech}/{runtime}/{executor} not a partition"
+    _assert_partition(report.claims, N)
+    assert sum(report.chunk_sizes) == N
+    assert report.total_iters == N
+    assert report.steps == len(report.claims)
+    assert session.drained() and session.remaining() == 0
+
+
+@pytest.mark.parametrize("runtime", RUNTIMES)
+def test_sim_executor_accounts_every_iteration(runtime):
+    N, P = 2_000, 8
+    session = dls.loop(N, technique="fac2", P=P, runtime=runtime)
+    report = session.execute(
+        None, executor="sim", costs=np.full(N, 1e-3),
+        speeds=np.linspace(0.5, 2.0, P))
+    assert report.total_iters == N
+    assert report.wall_time > 0
+    assert report.executor == "sim"
+
+
+def test_report_busy_time_and_cov():
+    N, P = 4_000, 4
+    session = dls.loop(N, technique="gss", P=P)
+    report = session.execute(lambda a, b: None, executor="serial")
+    assert report.busy_time.shape == (P,)
+    assert (report.busy_time >= 0).all()
+    assert 0.0 <= report.cov or report.cov == 0.0  # finite, defined
+    assert "gss" in report.summary()
+
+
+def test_claims_iterator_is_pipeline_form():
+    session = dls.loop(3_000, technique="tss", P=3)
+    total = 0
+    for c in session.claims(pe=1):
+        total += c.size
+    assert total == 3_000
+    # all claims were logged against pe 1
+    rep = session.report()
+    assert rep.per_pe_iters[1] == 3_000
+    assert rep.per_pe_iters[0] == 0
+
+
+def test_weight_policy_adaptive_feeds_back():
+    """AWF: a slow PE's recorded throughput shrinks its next chunks."""
+    board = WeightBoard(2, ema=0.9)
+    session = dls.loop(1_000_000, technique="awf", P=2, weights=board)
+    c_fast_before = session.claim(0)
+    c_slow_before = session.claim(1)
+    assert c_fast_before.size == c_slow_before.size
+    for _ in range(10):
+        session.record(0, 1000, 0.1)   # 10k it/s
+        session.record(1, 1000, 10.0)  # 100 it/s
+    c_fast = session.claim(0)
+    c_slow = session.claim(1)
+    assert c_slow.size < c_fast.size
+
+
+def test_window_backends_by_name():
+    from repro.core.rma import SimWindow
+
+    s = dls.loop(100, technique="ss", P=2, window="sim")
+    assert isinstance(s.runtime.window, SimWindow)
+    n = sum(c.size for c in s.claims(0))
+    assert n == 100
+    assert s.runtime.window.n_rmw > 0 and s.runtime.window.clock > 0
+
+    s = dls.loop(100, technique="ss", P=2, window="thread")
+    assert sum(c.size for c in s.claims(0)) == 100
+
+
+def test_session_state_restore_roundtrip():
+    """A restored session re-serves exactly the unclaimed tail."""
+    win = ThreadWindow()
+    s = dls.loop(2_000, technique="gss", P=2, window=win)
+    served = 0
+    for _ in range(3):
+        served += s.claim(0).size
+    st = s.state()
+    # "crash": fresh window + session, restore counters
+    s2 = dls.loop(2_000, technique="gss", P=2, window=ThreadWindow(),
+                  loop_id=99)
+    s2.restore(st)
+    tail = sum(c.size for c in s2.claims(0))
+    assert served + tail == 2_000
+
+
+# ---------------------------------------------------------------------------
+# AWF closed-form extraction (satellite): the weight= path of
+# chunk_size_closed must match the math previously inlined in
+# OneSidedRuntime.claim.
+# ---------------------------------------------------------------------------
+
+
+def _old_inline_awf(spec, i, weight):
+    b = i // spec.P + 1
+    base = 0.5 ** b * spec.N / spec.P
+    return max(int(math.ceil(weight * base)), spec.min_chunk)
+
+
+@pytest.mark.parametrize("tech", ["wf", "awf"])
+def test_awf_closed_form_matches_old_inline(tech):
+    for N in (1, 97, 10_000, 1_000_000):
+        for P in (1, 7, 64, 288):
+            spec = LoopSpec(tech, N=N, P=P)
+            for i in (0, 1, P - 1, P, 3 * P + 1, 10 * P):
+                for w in (0.05, 0.25, 1.0, 1.7, 4.0):
+                    assert chunk_size_closed(spec, i, pe=0, weight=w) == \
+                        _old_inline_awf(spec, i, w), (N, P, i, w)
+
+
+def test_awf_weight_ignored_by_unweighted_techniques():
+    spec = LoopSpec("gss", N=10_000, P=8)
+    assert chunk_size_closed(spec, 3, weight=0.1) == chunk_size_closed(spec, 3)
+
+
+def test_awf_weight_respects_max_chunk_cap():
+    # The old inline path bypassed LoopSpec.max_chunk; the extracted form
+    # applies it (FT refinement: bound the work lost when a PE dies).
+    spec = LoopSpec("awf", N=100_000, P=4, max_chunk=50)
+    assert chunk_size_closed(spec, 0, weight=4.0) == 50
+
+
+# ---------------------------------------------------------------------------
+# ContinuousBatcher drain contract (satellite): no probe claims burned.
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_burns_no_probe_scheduling_steps():
+    from repro.serve.engine import ContinuousBatcher, Request
+
+    reqs = [Request(rid=i, prompt=np.zeros(4, np.int32), max_new=4)
+            for i in range(200)]
+    cb = ContinuousBatcher(n_workers=4, technique="gss")
+    done = cb.schedule(reqs, lambda chunk, w: 0.01 * len(chunk))
+    assert done.shape == (200,)
+    assert (done > 0).all()
+    # sequential claiming must take exactly the closed-form number of steps:
+    # the old drain check (claim-probe per worker) burned extra step indices.
+    expected = scheduling_steps(LoopSpec("gss", N=200, P=4))
+    assert cb.last_report.steps == expected
+    assert sum(cb.last_report.chunk_sizes) == 200
+
+
+def test_two_sided_restore_rebuilds_recurrence_state():
+    """Restoring a mid-batch two-sided checkpoint must not crash or stall:
+    the derived (_k_tss, _batch_base) state is re-derived, not left stale."""
+    for tech in ("fac2", "wf", "awf", "tss", "tfss"):
+        src = dls.loop(10_000, technique=tech, P=4, runtime="two_sided")
+        served = sum(src.claim(i % 4).size for i in range(5))  # mid-batch
+        st = src.state()
+        dst = dls.loop(10_000, technique=tech, P=4, runtime="two_sided")
+        dst.restore(st)
+        tail = sum(c.size for c in dst.claims(0))
+        assert served + tail == 10_000, tech
+
+
+def test_two_sided_reset_replays_fresh_series():
+    """reset() of a drained two-sided session must reproduce the original
+    chunk series, not continue a stale TSS ramp from its floor."""
+    from repro.core import chunk_series_recurrence
+
+    s = dls.loop(2_000, technique="tss", P=4, runtime="two_sided")
+    first = [c.size for c in s.claims(0)]
+    s.reset()
+    second = [c.size for c in s.claims(0)]
+    assert first == second == chunk_series_recurrence(
+        LoopSpec("tss", N=2_000, P=4))
+
+
+def test_loop_warns_on_noop_weight_policy():
+    """Weights supplied for a technique that ignores them is a silent no-op
+    bug waiting to happen -- loop() must warn."""
+    with pytest.warns(UserWarning, match="ignores weights"):
+        dls.loop(1_000, technique="fac2", P=4, weights="awf")
+    # weighted techniques and plain uniform stay silent
+    import warnings as w
+    with w.catch_warnings():
+        w.simplefilter("error")
+        dls.loop(1_000, technique="awf", P=4, weights="awf")
+        dls.loop(1_000, technique="fac2", P=4)
+
+
+def test_deprecated_shims_warn_and_work():
+    from repro.core import LoopSpec, run_threaded_one_sided, run_threaded_two_sided
+
+    with pytest.warns(DeprecationWarning):
+        claims = run_threaded_one_sided(LoopSpec("fac2", N=1000, P=4),
+                                        lambda a, b: None)
+    assert sum(c.size for c in claims) == 1000
+    with pytest.warns(DeprecationWarning):
+        claims = run_threaded_two_sided(LoopSpec("ss", N=500, P=4),
+                                        lambda a, b: None)
+    assert sum(c.size for c in claims) == 500

@@ -10,7 +10,7 @@ import threading
 
 import numpy as np
 
-from repro.core import LoopSpec, OneSidedRuntime
+from repro import dls
 from repro.core.rma import ThreadWindow
 from repro.data import DLSSampler, EpochState
 from repro.train.trainer import SimCluster
@@ -78,16 +78,13 @@ def test_window_crash_restart_no_duplicates():
 def test_concurrent_claims_with_contention_partition():
     """Heavy contention (slow RMW) still yields an exact partition."""
     N = 8_000
-    spec = LoopSpec("gss", N=N, P=16)
-    rt = OneSidedRuntime(spec, ThreadWindow(rmw_latency=2e-5))
+    session = dls.loop(N, technique="gss", P=16,
+                       window=ThreadWindow(rmw_latency=2e-5))
     hits = np.zeros(N, np.int32)
     lock = threading.Lock()
 
     def worker(pe):
-        while True:
-            c = rt.claim(pe)
-            if c is None:
-                return
+        for c in session.claims(pe):
             with lock:
                 hits[c.start:c.stop] += 1
 

@@ -1,11 +1,17 @@
 """Real coordination-service window: the production multi-host claim path.
 
 Runs jax.distributed.initialize() in a subprocess (single-process service)
-and exercises KVStoreWindow's atomic fetch-add + a full OneSidedRuntime loop
+and exercises KVStoreWindow's atomic fetch-add + a full one-sided session
 against it -- validating the exact code path a TPU cluster would use.
+
+Skipped (not failed) when the installed jax's coordination client lacks
+``key_value_increment``: without a server-side atomic RMW there is nothing
+correct to build a passive-target window on (see KVStoreWindow.available).
 """
 import subprocess
 import sys
+
+import pytest
 
 REPO = __file__.rsplit("/tests/", 1)[0]
 
@@ -13,7 +19,7 @@ SCRIPT = r"""
 import jax
 jax.distributed.initialize(coordinator_address="localhost:12355",
                            num_processes=1, process_id=0)
-from repro.core import LoopSpec, OneSidedRuntime
+from repro import dls
 from repro.core.rma import KVStoreWindow
 
 win = KVStoreWindow(namespace="test/dls")
@@ -23,21 +29,20 @@ assert win.fetch_add("ctr", 3) == 5
 assert win.read("ctr") == 8
 
 # full self-scheduled loop through the coordination service
-spec = LoopSpec("fac2", N=1000, P=4)
-rt = OneSidedRuntime(spec, win, loop_id=7)
-total, claims = 0, 0
-while True:
-    c = rt.claim(0)
-    if c is None:
-        break
-    total += c.size
-    claims += 1
+session = dls.loop(1000, technique="fac2", P=4, window=win, loop_id=7)
+total = sum(c.size for c in session.claims(0))
 assert total == 1000, total
-print(f"KVSTORE_OK claims={claims}")
+assert session.drained()
+print(f"KVSTORE_OK claims={session.report().steps}")
 """
 
 
 def test_kvstore_window_real_coordination_service():
+    from repro.core.rma import KVStoreWindow
+
+    if not KVStoreWindow.available():
+        pytest.skip("jax coordination client has no key_value_increment "
+                    "(atomic fetch-add): KVStoreWindow unavailable")
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
         timeout=300, cwd=REPO,

@@ -1,18 +1,12 @@
-"""Concurrency tests for the One_Sided / Two_Sided runtimes (paper Sec. 3)."""
+"""Concurrency tests for the One_Sided / Two_Sided runtimes (paper Sec. 3),
+driven through the ``repro.dls`` session facade."""
 import threading
 
 import numpy as np
 import pytest
 
-from repro.core import (
-    LoopSpec,
-    OneSidedRuntime,
-    ThreadWindow,
-    TwoSidedRuntime,
-    run_threaded_one_sided,
-    run_threaded_two_sided,
-    weights_from_speeds,
-)
+from repro import dls
+from repro.core import ThreadWindow, weights_from_speeds
 
 TECHS = ["ss", "gss", "tss", "fac2", "wf", "static", "tfss"]
 
@@ -22,7 +16,6 @@ def test_one_sided_partition_under_concurrency(tech):
     """Every iteration executed exactly once, no matter the interleaving."""
     N, P = 20_000, 16
     w = tuple(weights_from_speeds(np.linspace(0.5, 2.0, P))) if tech == "wf" else None
-    spec = LoopSpec(tech, N=N, P=P, weights=w)
     hits = np.zeros(N, dtype=np.int64)
     lock = threading.Lock()
 
@@ -30,10 +23,11 @@ def test_one_sided_partition_under_concurrency(tech):
         with lock:
             hits[a:b] += 1
 
-    claims = run_threaded_one_sided(spec, work, n_threads=P)
+    report = dls.loop(N, technique=tech, P=P, weights=w).execute(
+        work, executor="threads")
     assert (hits == 1).all()
     # claims partition [0, N)
-    ivals = sorted((c.start, c.stop) for c in claims)
+    ivals = sorted((c.start, c.stop) for c in report.claims)
     assert ivals[0][0] == 0 and ivals[-1][1] == N
     for (a0, b0), (a1, b1) in zip(ivals, ivals[1:]):
         assert b0 == a1, "gap or overlap in claimed intervals"
@@ -42,7 +36,6 @@ def test_one_sided_partition_under_concurrency(tech):
 @pytest.mark.parametrize("tech", ["ss", "gss", "fac2"])
 def test_two_sided_partition_under_concurrency(tech):
     N, P = 20_000, 8
-    spec = LoopSpec(tech, N=N, P=P)
     hits = np.zeros(N, dtype=np.int64)
     lock = threading.Lock()
 
@@ -50,24 +43,22 @@ def test_two_sided_partition_under_concurrency(tech):
         with lock:
             hits[a:b] += 1
 
-    claims = run_threaded_two_sided(spec, work, n_threads=P)
+    report = dls.loop(N, technique=tech, P=P, runtime="two_sided").execute(
+        work, executor="threads")
     assert (hits == 1).all()
-    assert sum(c.size for c in claims) == N
+    assert sum(c.size for c in report.claims) == N
 
 
 def test_one_sided_step_indices_unique():
     """Step 1's fetch-add must hand out unique i values (paper's atomicity)."""
-    spec = LoopSpec("fac2", N=50_000, P=32)
     # widen the race window with a slow RMW
-    rt = OneSidedRuntime(spec, ThreadWindow(rmw_latency=1e-5))
+    session = dls.loop(50_000, technique="fac2", P=32,
+                       window=ThreadWindow(rmw_latency=1e-5))
     seen = []
     lock = threading.Lock()
 
     def worker(pe):
-        while True:
-            c = rt.claim(pe)
-            if c is None:
-                return
+        for c in session.claims(pe):
             with lock:
                 seen.append(c.step)
 
@@ -80,41 +71,53 @@ def test_one_sided_step_indices_unique():
 def test_one_sided_namespacing_allows_multiple_loops():
     """Monotonic KV backends need per-loop counters; two loops must not clash."""
     win = ThreadWindow()
-    spec = LoopSpec("gss", N=1000, P=4)
-    r1 = OneSidedRuntime(spec, win)
-    r2 = OneSidedRuntime(spec, win)
-    tot1 = tot2 = 0
-    while True:
-        c = r1.claim(0)
-        if c is None:
-            break
-        tot1 += c.size
-    while True:
-        c = r2.claim(0)
-        if c is None:
-            break
-        tot2 += c.size
+    s1 = dls.loop(1000, technique="gss", P=4, window=win)
+    s2 = dls.loop(1000, technique="gss", P=4, window=win)
+    tot1 = sum(c.size for c in s1.claims(0))
+    tot2 = sum(c.size for c in s2.claims(0))
     assert tot1 == 1000 and tot2 == 1000
+
+
+def test_session_reset_opens_fresh_namespace():
+    """reset() rewinds a drained session without disturbing the old counters."""
+    win = ThreadWindow()
+    s = dls.loop(500, technique="fac2", P=2, window=win)
+    assert sum(c.size for c in s.claims(0)) == 500
+    assert s.drained()
+    s.reset()
+    assert s.remaining() == 500
+    assert sum(c.size for c in s.claims(1)) == 500
 
 
 def test_two_sided_master_recurrence_matches_series():
     from repro.core import chunk_series_recurrence
 
-    spec = LoopSpec("gss", N=5000, P=4)
-    rt = TwoSidedRuntime(spec)
+    session = dls.loop(5000, technique="gss", P=4, runtime="two_sided")
     got = []
     while True:
-        c = rt._next_chunk(pe=len(got) % 4)
+        c = session.claim(len(got) % 4)
         if c is None:
             break
         got.append(c.size)
-    assert got == chunk_series_recurrence(spec)
+    assert got == chunk_series_recurrence(dls.LoopSpec("gss", N=5000, P=4))
 
 
 def test_awf_live_weight_changes_chunk():
-    spec = LoopSpec("awf", N=100_000, P=8, weights=tuple([1.0] * 8))
-    rt = OneSidedRuntime(spec)
-    c_small = rt.claim(0, weight=0.25)
-    c_big = rt.claim(1, weight=2.0)
+    session = dls.loop(100_000, technique="awf", P=8,
+                       weights=tuple([1.0] * 8))
+    c_small = session.claim(0, weight=0.25)
+    c_big = session.claim(1, weight=2.0)
     assert c_big.size > c_small.size
     assert c_big.size >= int(0.9 * 8 * c_small.size)  # ~8x modulo ceil/batch
+
+
+def test_two_sided_queue_carries_live_weight():
+    """The request/serve path must honor per-claim AWF weights end to end."""
+    session = dls.loop(100_000, technique="awf", P=8, runtime="two_sided")
+    rt = session.runtime
+    # serve synchronously: request then serve_pending then read the replies
+    r1 = rt.request(0, weight=0.25)
+    r2 = rt.request(1, weight=2.0)
+    rt.serve_pending()
+    c_small, c_big = r1.get(), r2.get()
+    assert c_big.size > c_small.size
