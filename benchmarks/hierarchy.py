@@ -1,0 +1,84 @@
+"""Flat vs hierarchical DLS at scale: the two-level claim-count story.
+
+Extends ``benchmarks/overhead.py`` Part 2 (large-P DES scalability, the
+paper's listed future work) with the follow-up paper's two-level scheme
+(arXiv:1903.09510): at P = 288 / 1024 / 4096, a flat one-sided loop pays
+two *global* RMWs per chunk -- the window NIC saturates -- while the
+hierarchical runtime claims node super-chunks globally (GSS over nodes)
+and sub-schedules them through node-local shared-memory windows, so the
+global window sees orders of magnitude fewer RMWs.
+
+Output columns: P, impl, T_loop, parallel efficiency, mean claim latency,
+global / local RMW counts, and the global-RMW reduction factor.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import LoopSpec, SimConfig, simulate
+
+#: PEs per node for the hierarchical rows (the paper cluster's 36-core
+#: dual-socket Xeon nodes; 288 = 8 nodes).
+PES_PER_NODE = 36
+
+
+def sweep(P_list=(288, 1024, 4096), iters_per_pe=200, technique="ss",
+          outer_technique="gss", mean_cost=0.05):
+    """Homogeneous large-P sweep; returns one row per (P, impl)."""
+    rows = []
+    for P in P_list:
+        n = P * iters_per_pe
+        costs = np.full(n, mean_cost)
+        speeds = np.ones(P)
+        ideal = n * mean_cost / P
+        flat = simulate(SimConfig(
+            LoopSpec(technique, N=n, P=P), speeds, costs, impl="one_sided"))
+        nodes = max(P // PES_PER_NODE, 1)
+        hier = simulate(SimConfig(
+            LoopSpec(outer_technique, N=n, P=P), speeds, costs,
+            impl="hierarchical", nodes=nodes, inner_technique=technique))
+        for impl, r in (("one_sided", flat), (f"hier_{nodes}n", hier)):
+            rows.append(dict(
+                P=P, impl=impl, t_loop=r.T_loop, efficiency=ideal / r.T_loop,
+                claim_lat_us=r.mean_claim_latency * 1e6,
+                rmw_global=r.n_rmw_global, rmw_local=r.n_rmw_local,
+                reduction=(flat.n_rmw_global / max(r.n_rmw_global, 1)),
+            ))
+    return rows
+
+
+def heterogeneous_row(ratio="2:1", nodes=8, n=28_800):
+    """The paper's 288-core mix, flat vs hierarchical, PSIA-like costs."""
+    from repro.core import paper_cluster, psia_costs
+    from repro.core.sim import PSIA_MEAN_COST
+
+    speeds, _ = paper_cluster(ratio, "xeon")
+    costs = psia_costs(n, mean=PSIA_MEAN_COST)
+    flat = simulate(SimConfig(
+        LoopSpec("ss", N=n, P=288), speeds, costs, impl="one_sided"))
+    hier = simulate(SimConfig(
+        LoopSpec("gss", N=n, P=288), speeds, costs,
+        impl="hierarchical", nodes=nodes, inner_technique="ss"))
+    return flat, hier
+
+
+def main(quick=False):
+    print("name,us_per_claim,derived")
+    P_list = (288, 1024) if quick else (288, 1024, 4096)
+    for r in sweep(P_list, iters_per_pe=100 if quick else 200):
+        print(f"hier_sweep_{r['impl']}_P{r['P']},{r['claim_lat_us']:.1f},"
+              f"eff={r['efficiency']:.3f} rmw_g={r['rmw_global']} "
+              f"rmw_l={r['rmw_local']} reduction={r['reduction']:.1f}x")
+    flat, hier = heterogeneous_row(n=14_400 if quick else 28_800)
+    print(f"hier_hetero_flat_288,{flat.mean_claim_latency*1e6:.1f},"
+          f"T={flat.T_loop:.2f}s rmw_g={flat.n_rmw_global}")
+    print(f"hier_hetero_2level_288,{hier.mean_claim_latency*1e6:.1f},"
+          f"T={hier.T_loop:.2f}s rmw_g={hier.n_rmw_global} "
+          f"rmw_l={hier.n_rmw_local} "
+          f"reduction={flat.n_rmw_global/max(hier.n_rmw_global,1):.1f}x")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(quick="--quick" in sys.argv)

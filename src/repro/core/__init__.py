@@ -25,6 +25,7 @@ from .chunk_calculus import (  # noqa: F401
     tss_constants,
 )
 from .rma import (  # noqa: F401
+    HierarchicalWindow,
     KVStoreWindow,
     SimWindow,
     ThreadWindow,
@@ -33,6 +34,7 @@ from .rma import (  # noqa: F401
 )
 from .scheduler import (  # noqa: F401
     Claim,
+    HierarchicalRuntime,
     OneSidedRuntime,
     TwoSidedRuntime,
     run_threaded_one_sided,

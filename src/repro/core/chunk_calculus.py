@@ -209,6 +209,58 @@ def _max_steps_bound(spec: LoopSpec) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Two-level (hierarchical) topology math, shared by HierarchicalRuntime and
+# the DES so the simulated schedule can never drift from the real one.
+# ---------------------------------------------------------------------------
+
+def node_blocks(P: int, nodes: int):
+    """Contiguous PE blocks per node: (bounds, n_pes).
+
+    Block ``n`` is ``[bounds[n], bounds[n+1])``; every block is non-empty
+    for ``1 <= nodes <= P``.
+    """
+    bounds = [n * P // nodes for n in range(nodes + 1)]
+    return bounds, [bounds[j + 1] - bounds[j] for j in range(nodes)]
+
+
+def hierarchical_outer_spec(spec: LoopSpec, nodes: int) -> LoopSpec:
+    """The super-chunk-level spec: ``spec.technique`` over nodes-as-PEs.
+
+    Per-PE weights aggregate into node weights (sum == nodes).  min_chunk
+    scales by the largest node so a super-chunk never starves a node's
+    PEs; max_chunk is *not* lifted (it bounds per-PE work lost, and a
+    super-chunk is drained by the whole node).
+    """
+    bounds, n_pes = node_blocks(spec.P, nodes)
+    node_w = None
+    if spec.weights is not None:
+        sums = [sum(spec.weights[bounds[j]:bounds[j + 1]])
+                for j in range(nodes)]
+        tot = sum(sums) or 1.0
+        node_w = tuple(s * nodes / tot for s in sums)
+    return LoopSpec(spec.technique, N=spec.N, P=nodes, weights=node_w,
+                    min_chunk=spec.min_chunk * max(n_pes))
+
+
+def hierarchical_inner_spec(spec: LoopSpec, inner_technique: str,
+                            bounds, node: int, size: int) -> LoopSpec:
+    """The within-node spec for one super-chunk of ``size`` iterations.
+
+    A weighted inner technique renormalizes the node's PE weights to sum
+    to the node's PE count (the closed forms' convention).
+    """
+    n_pes = bounds[node + 1] - bounds[node]
+    w = None
+    if spec.weights is not None and inner_technique in WEIGHTED:
+        sub = spec.weights[bounds[node]:bounds[node + 1]]
+        tot = sum(sub) or 1.0
+        w = tuple(x * n_pes / tot for x in sub)
+    return LoopSpec(inner_technique, N=size, P=n_pes, weights=w,
+                    min_chunk=min(spec.min_chunk, size),
+                    max_chunk=spec.max_chunk)
+
+
+# ---------------------------------------------------------------------------
 # Recurrence forms (paper Table 2) -- the sequential master-side computation.
 # ---------------------------------------------------------------------------
 

@@ -29,11 +29,17 @@ host-coordination plane.  ``Window`` is the abstraction; three backends:
 
 All backends implement ``fetch_add(key, delta) -> old_value`` and
 ``read(key)``.
+
+``HierarchicalWindow`` composes a global window with per-node local windows
+(the paper's listed shared-memory window creation; the follow-up's MPI+MPI
+two-level scheme) and accounts RMWs per level -- see
+``scheduler.HierarchicalRuntime``.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, Optional
+import time
+from typing import Dict, List, Optional, Sequence
 
 
 class Window:
@@ -67,8 +73,8 @@ class ThreadWindow(Window):
             old = self._v.get(key, 0)
             self._v[key] = old + delta
             if self._rmw_latency:
-                import time
-
+                # Sleep *inside* the lock on purpose: the latency models the
+                # serialization of the RMW at the window, not wire time.
                 time.sleep(self._rmw_latency)
             return old
 
@@ -105,6 +111,130 @@ class SimWindow(ThreadWindow):
             self.n_rmw += 1
             self.clock += self.o_rma
             return old
+
+    def reset_clock(self) -> None:
+        """Zero the clock/RMW accounting so one window can serve many loops
+        without the next session inheriting stale overhead totals."""
+        with self._lock:
+            self.clock = 0.0
+            self.n_rmw = 0
+
+
+class HierarchicalWindow(Window):
+    """Two-level window: one *global* window + one *node-local* window per node.
+
+    The composition behind hierarchical DLS (arXiv:1903.09510, MPI+MPI):
+    node-level super-chunks are claimed through the global window (expensive
+    inter-node RMWs -- RDMA / coordination-service round trips) and
+    sub-divided through the claiming node's local window (cheap shared-memory
+    atomics).  ``fetch_add``/``read``/``reset`` address the *global* level,
+    so a ``HierarchicalWindow`` is a drop-in ``Window``; ``local(node)``
+    returns the node's local level.
+
+    Per-level RMW accounting (``n_rmw_global``/``n_rmw_local``) is kept here,
+    independent of the backends, so sessions can report the follow-up paper's
+    headline metric -- how many claims actually paid the global serialization
+    point -- for any backend mix.  ``SimWindow`` backends additionally carry
+    per-level virtual clocks (``clocks()``).
+    """
+
+    def __init__(self, nodes: int,
+                 global_window: Optional[Window] = None,
+                 local_windows: Optional[Sequence[Window]] = None):
+        if nodes <= 0:
+            raise ValueError("nodes must be positive")
+        self.nodes = nodes
+        self.global_window = global_window if global_window is not None \
+            else ThreadWindow()
+        self.local_windows: List[Window] = (
+            list(local_windows) if local_windows is not None
+            else [ThreadWindow() for _ in range(nodes)])
+        if len(self.local_windows) != nodes:
+            raise ValueError("need exactly one local window per node")
+        self._acct_lock = threading.Lock()  # global level only: local
+        # levels each count behind their own lock, so accounting never
+        # serializes across nodes (that is the contention the two-level
+        # design exists to remove).
+        self._n_rmw_global = 0
+        self._locals = [_LevelWindow(w) for w in self.local_windows]
+
+    @classmethod
+    def sim(cls, nodes: int, o_rma_global: float = 2e-6,
+            o_rma_local: float = 1e-7) -> "HierarchicalWindow":
+        """All-SimWindow composition with distinct per-level RMW costs."""
+        return cls(nodes, SimWindow(o_rma=o_rma_global),
+                   [SimWindow(o_rma=o_rma_local) for _ in range(nodes)])
+
+    # -- global level (the Window interface) ------------------------------
+    def fetch_add(self, key: str, delta: int) -> int:
+        old = self.global_window.fetch_add(key, delta)
+        with self._acct_lock:
+            self._n_rmw_global += 1
+        return old
+
+    def read(self, key: str) -> int:
+        return self.global_window.read(key)
+
+    def reset(self, key: str, value: int = 0) -> None:
+        self.global_window.reset(key, value)
+
+    # -- local level ------------------------------------------------------
+    def local(self, node: int) -> Window:
+        """The node-local window (RMWs counted against the local level)."""
+        return self._locals[node]
+
+    # -- per-level accounting ---------------------------------------------
+    @property
+    def n_rmw_global(self) -> int:
+        return self._n_rmw_global
+
+    @property
+    def n_rmw_local(self) -> int:
+        return sum(v.n_rmw for v in self._locals)
+
+    def clocks(self) -> Dict[str, float]:
+        """Per-level virtual clocks (SimWindow backends; 0.0 otherwise).
+
+        ``local`` is the *max* over node windows: local windows serialize
+        per node, so their costs overlap across nodes.
+        """
+        g = getattr(self.global_window, "clock", 0.0)
+        loc = [getattr(w, "clock", 0.0) for w in self.local_windows]
+        return {"global": g, "local": max(loc) if loc else 0.0}
+
+    def reset_clock(self) -> None:
+        with self._acct_lock:
+            self._n_rmw_global = 0
+        for v in self._locals:
+            v.reset_count()
+        for w in [self.global_window, *self.local_windows]:
+            if isinstance(w, SimWindow):
+                w.reset_clock()
+
+
+class _LevelWindow(Window):
+    """Window proxy counting its own RMWs (per node: no cross-node lock)."""
+
+    def __init__(self, inner: Window):
+        self._inner = inner
+        self._lock = threading.Lock()
+        self.n_rmw = 0
+
+    def fetch_add(self, key: str, delta: int) -> int:
+        old = self._inner.fetch_add(key, delta)
+        with self._lock:
+            self.n_rmw += 1
+        return old
+
+    def read(self, key: str) -> int:
+        return self._inner.read(key)
+
+    def reset(self, key: str, value: int = 0) -> None:
+        self._inner.reset(key, value)
+
+    def reset_count(self) -> None:
+        with self._lock:
+            self.n_rmw = 0
 
 
 class KVStoreWindow(Window):

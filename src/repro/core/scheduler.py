@@ -12,6 +12,12 @@
 compares against: a (non-dedicated) master owns the Table-2 recurrence and
 serves claims one at a time from a request queue.
 
+``HierarchicalRuntime`` is the follow-up work's two-level scheme
+(arXiv:1903.09510): nodes claim *super-chunks* through the global window
+with an outer technique's closed form, and PEs within a node sub-schedule
+the super-chunk through a cheap node-local window with an inner technique
+-- slashing the number of claims that pay the global serialization point.
+
 Both implement the ``repro.dls`` Runtime contract -- ``claim(pe, weight=)``,
 ``remaining_lower_bound()``, ``drained()``, ``state()``/``restore()`` -- so
 the ``DLSession`` facade can drive either interchangeably (see DESIGN.md).
@@ -25,15 +31,17 @@ both protocols for the paper's heterogeneous-cluster experiments.
 """
 from __future__ import annotations
 
+import bisect
 import itertools
 import queue
 import threading
+import time
 import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 from . import chunk_calculus as cc
-from .rma import ThreadWindow, Window
+from .rma import HierarchicalWindow, ThreadWindow, Window
 
 _loop_ids = itertools.count()
 
@@ -93,6 +101,227 @@ class OneSidedRuntime:
     def restore(self, st: Dict[str, int]) -> None:
         self.window.reset(self._ki, st["i"])
         self.window.reset(self._kl, st["lp"])
+
+
+# Internal sentinel: "this epoch is exhausted, advance to the next one".
+_RETRY = object()
+
+
+class HierarchicalRuntime:
+    """Two-level self-scheduling: node super-chunks + local sub-scheduling.
+
+    The follow-up paper's MPI+MPI scheme (arXiv:1903.09510) on top of the
+    closed forms: ``spec.technique`` is the *outer* technique, applied over
+    ``nodes`` virtual PEs to claim node-level super-chunks through the
+    global window (two expensive inter-node RMWs per super-chunk); the
+    *inner* technique then partitions each super-chunk among the node's PEs
+    through the node-local window (cheap shared-memory RMWs).  With e.g.
+    GSS over nodes + SS within nodes, the number of claims paying the
+    global serialization point drops from O(N/min_chunk) to the outer
+    technique's step count over ``nodes`` -- the claim-count reduction the
+    follow-up measures.
+
+    The protocol stays masterless at both levels.  Node-local state is a
+    sequence of *epochs*, one per super-chunk, each with its own counter
+    namespace ``n<node>/e<epoch>/{token,start,size,ready,i,lp,adv}``:
+
+      * a PE finding the current epoch unready elects itself refiller with
+        one local fetch-add on ``token`` (old value 0 wins); the winner
+        claims a super-chunk from the global window (outer closed form) and
+        publishes ``start``/``size`` then ``ready``; losers spin on
+        ``ready`` (shared-memory read, no global traffic).
+      * local claims are the paper's two fetch-adds against the epoch's
+        ``i``/``lp`` with the inner closed form over ``N=size``,
+        ``P=pes-in-node``.
+      * a PE that overruns the epoch (``lp >= size``) bumps the node's
+        ``seq`` hint (once, elected via ``adv``) and retries on the next
+        epoch.  Because exhausted epochs keep their counters, late claims
+        against them fail harmlessly -- no resets, so monotonic windows work.
+      * a refill that finds the global pool drained publishes a ``size=0``
+        sentinel epoch: every PE of the node then sees ``None``.
+
+    Work never migrates across nodes (no stealing); the outer technique's
+    decaying super-chunks bound the end-of-loop imbalance, exactly as in
+    the follow-up paper.
+    """
+
+    def __init__(self, spec: cc.LoopSpec, nodes: int,
+                 window: Optional[Window] = None,
+                 inner_technique: str = "ss",
+                 loop_id: Optional[int] = None):
+        if not 1 <= nodes <= spec.P:
+            raise ValueError(f"nodes must be in [1, P={spec.P}], got {nodes}")
+        if inner_technique not in cc.TECHNIQUES:
+            raise ValueError(f"unknown inner technique {inner_technique!r}")
+        self.spec = spec
+        self.nodes = nodes
+        self.inner_technique = inner_technique
+        if window is None:
+            window = HierarchicalWindow(nodes)
+        elif not isinstance(window, HierarchicalWindow):
+            # a plain Window becomes the global level; locals stay in-process
+            window = HierarchicalWindow(nodes, global_window=window)
+        if window.nodes != nodes:
+            raise ValueError(
+                f"window has {window.nodes} node levels, runtime wants {nodes}")
+        self.window = window
+        lid = next(_loop_ids) if loop_id is None else loop_id
+        self._pfx = f"loop{lid}"
+        self._gi = f"{self._pfx}/i"
+        self._gl = f"{self._pfx}/lp"
+        self._nseq = [f"{self._pfx}/n{n}/seq" for n in range(nodes)]
+        self._ekeys: Dict[tuple, tuple] = {}  # (node, epoch) -> key tuple
+        # Topology + level specs (shared with the DES via chunk_calculus so
+        # simulated schedules can never drift from the real runtime's).
+        self._bounds, self._n_pes = cc.node_blocks(spec.P, nodes)
+        self._outer_spec = cc.hierarchical_outer_spec(spec, nodes)
+        self._inner_specs: Dict[tuple, cc.LoopSpec] = {}
+
+    # -- PE -> node mapping -------------------------------------------------
+    def node_of(self, pe: int) -> int:
+        return min(max(bisect.bisect_right(self._bounds, pe) - 1, 0),
+                   self.nodes - 1)
+
+    def _local_rank(self, pe: int, node: int) -> int:
+        return min(max(pe - self._bounds[node], 0), self._n_pes[node] - 1)
+
+    def _inner_spec(self, node: int, size: int) -> cc.LoopSpec:
+        key = (node, size)
+        spec = self._inner_specs.get(key)
+        if spec is None:
+            spec = cc.hierarchical_inner_spec(
+                self.spec, self.inner_technique, self._bounds, node, size)
+            self._inner_specs[key] = spec
+        return spec
+
+    # Epoch counter-key tuple indices (see _epoch_keys).
+    _TOKEN, _START, _SIZE, _READY, _I, _LP, _ADV = range(7)
+
+    def _epoch_keys(self, node: int, e: int) -> tuple:
+        """Cached counter keys for (node, epoch) -- claim() is a hot path."""
+        keys = self._ekeys.get((node, e))
+        if keys is None:
+            ep = f"{self._pfx}/n{node}/e{e}"
+            keys = (f"{ep}/token", f"{ep}/start", f"{ep}/size", f"{ep}/ready",
+                    f"{ep}/i", f"{ep}/lp", f"{ep}/adv")
+            self._ekeys[(node, e)] = keys
+        return keys
+
+    # -- claiming -----------------------------------------------------------
+    def claim(self, pe: int = 0, weight: Optional[float] = None) -> Optional[Claim]:
+        """One scheduling step for PE ``pe``; None once drained for its node."""
+        node = self.node_of(pe)
+        local = self.window.local(node)
+        e = local.read(self._nseq[node])
+        while True:
+            got = self._claim_in_epoch(pe, node, local, e, weight)
+            if got is not _RETRY:
+                return got
+            e += 1
+
+    def _claim_in_epoch(self, pe, node, local, e, weight):
+        k_ = self._epoch_keys(node, e)
+        if local.read(k_[self._READY]) == 0:
+            if local.fetch_add(k_[self._TOKEN], 1) == 0:
+                # elected refiller: one global super-chunk claim
+                start, size = self._claim_super_chunk(node)
+                if start:
+                    local.fetch_add(k_[self._START], start)
+                local.fetch_add(k_[self._SIZE], size)
+                local.fetch_add(k_[self._READY], 1)
+            else:
+                while local.read(k_[self._READY]) == 0:
+                    time.sleep(0)  # another PE is refilling; local spin
+        size = local.read(k_[self._SIZE])
+        if size == 0:
+            return None  # sentinel epoch: global pool drained, node done
+        start = local.read(k_[self._START])
+        i_l = local.fetch_add(k_[self._I], 1)
+        k = cc.chunk_size_closed(self._inner_spec(node, size), i_l,
+                                 self._local_rank(pe, node), weight=weight)
+        off = local.fetch_add(k_[self._LP], k)
+        if off < size:
+            return Claim(step=i_l, start=start + off, size=min(k, size - off))
+        # epoch exhausted: exactly one PE advances the seq hint
+        if local.fetch_add(k_[self._ADV], 1) == 0:
+            local.fetch_add(self._nseq[node], 1)
+        return _RETRY
+
+    def _claim_super_chunk(self, node: int) -> tuple:
+        """Outer-level claim through the global window: (start, size).
+
+        (0, 0) means the global pool is drained.  Exactly the paper's
+        two-fetch-add protocol, with nodes as the PEs.
+        """
+        G, N = self.window, self.spec.N
+        if G.read(self._gl) >= N:  # fast path: no step burn once drained
+            return 0, 0
+        i_g = G.fetch_add(self._gi, 1)
+        K = cc.chunk_size_closed(self._outer_spec, i_g, node)
+        start = G.fetch_add(self._gl, K)
+        if start >= N:
+            return 0, 0
+        return start, min(K, N - start)
+
+    # -- drain contract -----------------------------------------------------
+    def remaining_lower_bound(self) -> int:
+        rem = max(self.spec.N - self.window.read(self._gl), 0)
+        for node in range(self.nodes):
+            local = self.window.local(node)
+            k_ = self._epoch_keys(node, local.read(self._nseq[node]))
+            if local.read(k_[self._READY]):
+                size = local.read(k_[self._SIZE])
+                rem += max(size - local.read(k_[self._LP]), 0)
+            elif local.read(k_[self._TOKEN]):
+                # refill in flight: the pool may still grow this node's way,
+                # so the drain question is not decided yet
+                rem += 1
+        return rem
+
+    def drained(self) -> bool:
+        return self.remaining_lower_bound() == 0
+
+    # -- checkpointable state ------------------------------------------------
+    def state(self) -> Dict:
+        """Global counters + per-node in-flight super-chunk remainders."""
+        st: Dict = {"i": self.window.read(self._gi),
+                    "lp": self.window.read(self._gl), "sc": []}
+        for node in range(self.nodes):
+            local = self.window.local(node)
+            k_ = self._epoch_keys(node, local.read(self._nseq[node]))
+            entry = None
+            if local.read(k_[self._READY]):
+                size = local.read(k_[self._SIZE])
+                done = min(local.read(k_[self._LP]), size)
+                if done < size:
+                    entry = [local.read(k_[self._START]) + done, size - done]
+            st["sc"].append(entry)
+        return st
+
+    def restore(self, st: Dict) -> None:
+        """Rebuild from a checkpoint (quiescent windows, reset-capable).
+
+        In-flight super-chunk remainders reopen as fresh epochs with the
+        inner schedule restarted over the remainder (``N=size-done``) --
+        the partition property is exact; only the remainder's chunk-size
+        series may differ from an uninterrupted run (same caveat as the
+        two-sided mid-batch restore).
+        """
+        self.window.reset(self._gi, st["i"])
+        self.window.reset(self._gl, st["lp"])
+        for node, entry in enumerate(st.get("sc", [None] * self.nodes)):
+            local = self.window.local(node)
+            e = local.read(self._nseq[node]) + 1  # a never-used epoch
+            k_ = self._epoch_keys(node, e)
+            if entry is not None:
+                start, size = entry
+                local.reset(k_[self._START], start)
+                local.reset(k_[self._SIZE], size)
+                local.reset(k_[self._I], 0)
+                local.reset(k_[self._LP], 0)
+                local.reset(k_[self._READY], 1)
+            # entry None: leave the epoch unready -> next claimer refills
+            local.reset(self._nseq[node], e)
 
 
 class TwoSidedRuntime:

@@ -20,8 +20,15 @@ Fidelity notes (matching the paper's observations):
   service time scales with the *master's* core speed; the master is
   non-dedicated -- it interleaves serving with executing its own iterations
   (checks the queue every ``breakafter`` own iterations).
+* Hierarchical claims (the follow-up paper's MPI+MPI two-level scheme)
+  split into rare super-chunk claims through the global window
+  (``o_rma_global``) and frequent local claims through per-node
+  shared-memory windows (``o_rma_local``), each window a separate
+  serialization point -- see EXPERIMENTS.md Sec. 2.
 
 The DES has no wall-clock dependence; it is deterministic given a seed.
+Overhead constants are calibrated against the paper's published numbers
+-- derivations in EXPERIMENTS.md ("DES calibration").
 """
 from __future__ import annotations
 
@@ -46,7 +53,7 @@ class SimConfig:
     spec: cc.LoopSpec
     speeds: np.ndarray  # per-PE relative speed (1.0 = reference core)
     costs: np.ndarray  # per-iteration execution cost at speed 1.0 [seconds]
-    impl: str = "one_sided"  # "one_sided" | "two_sided"
+    impl: str = "one_sided"  # "one_sided" | "two_sided" | "hierarchical"
     coordinator: int = 0  # PE hosting the window / playing the master
     # -- One_Sided overheads --
     o_rma: float = 2e-6  # window service time per atomic RMW [s]
@@ -68,6 +75,17 @@ class SimConfig:
     # service time alone.
     master_quantum: float = 2e-3
     seed: int = 0
+    # -- Hierarchical (impl="hierarchical") overheads --
+    # Outer level: node super-chunks through the global window at
+    # ``o_rma_global`` per RMW (defaults to ``o_rma``); inner level: local
+    # sub-scheduling through the node's shared-memory window at
+    # ``o_rma_local`` per RMW (an intra-node atomic is ~an order of magnitude
+    # cheaper than an inter-node RDMA -- see EXPERIMENTS.md).
+    nodes: int = 1
+    inner_technique: str = "ss"
+    o_rma_global: Optional[float] = None  # None -> o_rma
+    o_rma_local: float = 1e-7
+    o_issue_local: float = 1e-5  # CPU time to issue a *local* claim
 
     def __post_init__(self):
         self.speeds = np.asarray(self.speeds, dtype=np.float64)
@@ -76,6 +94,10 @@ class SimConfig:
             raise ValueError("speeds length must equal spec.P")
         if len(self.costs) != self.spec.N:
             raise ValueError("costs length must equal spec.N")
+        if self.o_rma_global is None:
+            self.o_rma_global = self.o_rma
+        if self.impl == "hierarchical" and not 1 <= self.nodes <= self.spec.P:
+            raise ValueError(f"nodes must be in [1, P], got {self.nodes}")
 
 
 @dataclass
@@ -87,11 +109,14 @@ class SimResult:
     per_pe_iters: np.ndarray  # iterations executed per PE
     master_serve_time: float = 0.0  # two-sided: total master time serving
     mean_claim_latency: float = 0.0  # mean time from claim issue to grant
+    n_rmw_global: int = 0  # RMWs served by the global window
+    n_rmw_local: int = 0  # RMWs served by node-local windows (hierarchical)
 
     def summary(self) -> str:
         return (
             f"T_loop={self.T_loop:.2f}s claims={self.n_claims} cov={self.cov:.3f} "
-            f"serve={self.master_serve_time:.2f}s claim_lat={self.mean_claim_latency*1e6:.1f}us"
+            f"serve={self.master_serve_time:.2f}s claim_lat={self.mean_claim_latency*1e6:.1f}us "
+            f"rmw_g={self.n_rmw_global} rmw_l={self.n_rmw_local}"
         )
 
 
@@ -121,18 +146,20 @@ def _simulate_one_sided(cf: SimConfig) -> SimResult:
     claim_started = {}
     claim_latencies = []
     n_claims = 0
+    n_rmw = 0
 
     def push(t, kind, pe, payload=None):
         heapq.heappush(evq, (t, next(seq), kind, pe, payload))
 
     def window_grant(now):
         """If the window is free and someone waits, grant one RMW."""
-        nonlocal win_busy_until
+        nonlocal win_busy_until, n_rmw
         if not waiters or win_busy_until > now + 1e-18:
             return
         idx = rng.randrange(len(waiters)) if cf.lock_polling_random else 0
         pe, phase, ready, k = waiters.pop(idx)
         win_busy_until = now + cf.o_rma
+        n_rmw += 1
         push(now + cf.o_rma, f"rmw{phase}_done", pe, k)
         push(now + cf.o_rma, "win_free", -1)
 
@@ -191,6 +218,219 @@ def _simulate_one_sided(cf: SimConfig) -> SimResult:
         cov=cov,
         per_pe_iters=iters,
         mean_claim_latency=float(np.mean(claim_latencies)) if claim_latencies else 0.0,
+        n_rmw_global=n_rmw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical DES (two-level: global super-chunks + node-local windows)
+# ---------------------------------------------------------------------------
+
+
+def _simulate_hierarchical(cf: SimConfig) -> SimResult:
+    """Two-level DLS over a virtual cluster (arXiv:1903.09510's scheme).
+
+    Outer level: nodes claim super-chunks through the global window
+    (``spec.technique`` over P=nodes, two RMWs at ``o_rma_global`` each,
+    Lock-Polling fairness as in the flat sim).  Inner level: each node's
+    PEs sub-schedule the live super-chunk through the node's shared-memory
+    window (``inner_technique`` over the node's PEs, two RMWs at
+    ``o_rma_local`` each, serialized *per node* so nodes overlap).  One PE
+    per node refills at a time; node mates arriving mid-refill park until
+    the super-chunk is published -- the DES analogue of the runtime's
+    election protocol.
+    """
+    spec, N = cf.spec, cf.spec.N
+    P, nodes = spec.P, cf.nodes
+    rng = random.Random(cf.seed)
+    pref = np.concatenate([[0.0], np.cumsum(cf.costs)])
+
+    # Topology + level specs come from the same helpers HierarchicalRuntime
+    # uses, so the simulated schedule cannot drift from the real one.
+    bounds, n_pes = cc.node_blocks(P, nodes)
+    node_of = np.searchsorted(np.array(bounds[1:]), np.arange(P), side="right")
+    outer = cc.hierarchical_outer_spec(spec, nodes)
+    inner_specs = {}
+
+    def inner_spec(node, size):
+        key = (node, size)
+        if key not in inner_specs:
+            inner_specs[key] = cc.hierarchical_inner_spec(
+                spec, cf.inner_technique, bounds, node, size)
+        return inner_specs[key]
+
+    # Global window state (outer level)
+    glob_i = 0
+    glob_lp = 0
+    g_busy_until = 0.0
+    g_waiters: List[tuple] = []  # (pe, phase, payload)
+
+    # Per-node state (inner level)
+    l_busy = [0.0] * nodes
+    l_waiters: List[List[tuple]] = [[] for _ in range(nodes)]
+    sc: List[Optional[dict]] = [None] * nodes  # live super-chunk per node
+    refilling = [False] * nodes
+    parked: List[List[int]] = [[] for _ in range(nodes)]
+    node_done = [False] * nodes
+
+    seq = itertools.count()
+    evq: List[tuple] = []
+
+    finish = np.zeros(P)
+    iters = np.zeros(P, dtype=np.int64)
+    claim_started = {}
+    claim_latencies = []
+    n_claims = 0
+    n_rmw_global = 0
+    n_rmw_local = 0
+    done_pes = 0
+
+    def push(t, kind, pe, payload=None):
+        heapq.heappush(evq, (t, next(seq), kind, pe, payload))
+
+    def g_grant(now):
+        nonlocal g_busy_until, n_rmw_global
+        if not g_waiters or g_busy_until > now + 1e-18:
+            return
+        idx = rng.randrange(len(g_waiters)) if cf.lock_polling_random else 0
+        pe, phase, payload = g_waiters.pop(idx)
+        g_busy_until = now + cf.o_rma_global
+        n_rmw_global += 1
+        push(now + cf.o_rma_global, f"g{phase}_done", pe, payload)
+        push(now + cf.o_rma_global, "g_free", -1)
+
+    def l_grant(node, now):
+        nonlocal n_rmw_local
+        if not l_waiters[node] or l_busy[node] > now + 1e-18:
+            return
+        idx = rng.randrange(len(l_waiters[node])) if cf.lock_polling_random else 0
+        pe, phase, payload = l_waiters[node].pop(idx)
+        l_busy[node] = now + cf.o_rma_local
+        n_rmw_local += 1
+        push(now + cf.o_rma_local, f"l{phase}_done", pe, payload)
+        push(now + cf.o_rma_local, "l_free", -1, node)
+
+    def pe_finish(pe, t):
+        nonlocal done_pes
+        finish[pe] = t
+        claim_started.pop(pe, None)
+        done_pes += 1
+
+    def start_refill(pe, node, t):
+        """This PE refills; node mates park until the super-chunk lands."""
+        if node_done[node]:
+            pe_finish(pe, t)
+            return
+        if refilling[node]:
+            parked[node].append(pe)
+            return
+        if glob_lp >= N:  # fast path: drained, no RMWs burned
+            drain_node(node, t)
+            pe_finish(pe, t)
+            return
+        refilling[node] = True
+        push(t + cf.o_issue / cf.speeds[pe], "want_g1", pe)
+
+    def drain_node(node, t):
+        node_done[node] = True
+        refilling[node] = False
+        for q in parked[node]:
+            pe_finish(q, t)
+        parked[node].clear()
+
+    def want_local(pe, t):
+        node = node_of[pe]
+        if node_done[node]:
+            pe_finish(pe, t)
+            return
+        if sc[node] is None:
+            start_refill(pe, node, t)
+            return
+        claim_started.setdefault(pe, t)
+        l_waiters[node].append((pe, 1, sc[node]))
+        l_grant(node, t)
+
+    for pe in range(P):
+        push(cf.o_issue_local / cf.speeds[pe], "want_l1", pe)
+
+    while evq and done_pes < P:
+        t, _, kind, pe, payload = heapq.heappop(evq)
+        node = node_of[pe] if pe >= 0 else -1
+        if kind == "want_l1":
+            want_local(pe, t)
+        elif kind == "l1_done":
+            s = payload  # the super-chunk this PE claimed against
+            i_l = s["i"]
+            s["i"] += 1
+            k = cc.chunk_size_closed(
+                inner_spec(s["node"], s["size"]), i_l, pe - bounds[node])
+            push(t + cf.t_calc / cf.speeds[pe], "want_l2", pe, (s, k))
+        elif kind == "want_l2":
+            l_waiters[node].append((pe, 2, payload))
+            l_grant(node, t)
+        elif kind == "l2_done":
+            s, k = payload
+            off = s["lp"]
+            s["lp"] += k
+            if off >= s["size"]:
+                # epoch exhausted (or stale): first discoverer clears it
+                if sc[node] is s:
+                    sc[node] = None
+                want_local(pe, t)
+                continue
+            claim_latencies.append(t - claim_started.pop(pe))
+            n_claims += 1
+            a = s["start"] + off
+            b = s["start"] + min(off + k, s["size"])
+            iters[pe] += b - a
+            exec_t = (pref[b] - pref[a]) / cf.speeds[pe]
+            push(t + exec_t + cf.o_issue_local / cf.speeds[pe], "want_l1", pe)
+        elif kind == "want_g1":
+            claim_started.setdefault(pe, t)
+            g_waiters.append((pe, 1, None))
+            g_grant(t)
+        elif kind == "g1_done":
+            i_g = glob_i
+            glob_i += 1
+            K = cc.chunk_size_closed(outer, i_g, node)
+            push(t + cf.o_claim_net + cf.t_calc / cf.speeds[pe],
+                 "want_g2", pe, K)
+        elif kind == "want_g2":
+            g_waiters.append((pe, 2, payload))
+            g_grant(t)
+        elif kind == "g2_done":
+            K = payload
+            start = glob_lp
+            glob_lp += K
+            t_got = t + cf.o_claim_net
+            if start >= N:
+                drain_node(node, t_got)
+                pe_finish(pe, t_got)
+                continue
+            sc[node] = {"node": node, "start": start,
+                        "size": min(K, N - start), "i": 0, "lp": 0}
+            refilling[node] = False
+            woken = [pe] + parked[node]
+            parked[node].clear()
+            for q in woken:
+                push(t_got, "want_l1", q)
+        elif kind == "g_free":
+            g_grant(t)
+        elif kind == "l_free":
+            l_grant(payload, t)
+        else:  # pragma: no cover
+            raise AssertionError(kind)
+
+    cov = float(np.std(finish) / np.mean(finish)) if np.mean(finish) > 0 else 0.0
+    return SimResult(
+        T_loop=float(finish.max()),
+        finish=finish,
+        n_claims=n_claims,
+        cov=cov,
+        per_pe_iters=iters,
+        mean_claim_latency=float(np.mean(claim_latencies)) if claim_latencies else 0.0,
+        n_rmw_global=n_rmw_global,
+        n_rmw_local=n_rmw_local,
     )
 
 
@@ -382,6 +622,8 @@ def simulate(cf: SimConfig) -> SimResult:
         return _simulate_one_sided(cf)
     if cf.impl == "two_sided":
         return _simulate_two_sided(cf)
+    if cf.impl == "hierarchical":
+        return _simulate_hierarchical(cf)
     raise ValueError(f"unknown impl {cf.impl!r}")
 
 

@@ -24,7 +24,8 @@ from repro.core.chunk_calculus import (  # noqa: F401  (re-exported surface)
     WEIGHTED,
     LoopSpec,
 )
-from repro.core.scheduler import Claim  # noqa: F401
+from repro.core.rma import HierarchicalWindow  # noqa: F401
+from repro.core.scheduler import Claim, HierarchicalRuntime  # noqa: F401
 
 from .executors import EXECUTORS, execute  # noqa: F401
 from .policies import (  # noqa: F401
@@ -45,6 +46,8 @@ __all__ = [
     "Claim",
     "DLSession",
     "EXECUTORS",
+    "HierarchicalRuntime",
+    "HierarchicalWindow",
     "LoopSpec",
     "RUNTIMES",
     "Runtime",

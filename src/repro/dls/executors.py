@@ -56,21 +56,31 @@ def _serial(session, work_fn: Optional[WorkFn]):
     """Round-robin over the spec's P logical PEs, one claim at a time."""
     P = session.spec.P
     t0 = time.perf_counter()
+    # A PE's None retires that PE only: hierarchical runtimes drain per
+    # *node* (a PE of an exhausted node sees None while other nodes still
+    # hold super-chunk remainders), so the drain ends when every PE is done.
+    done = [False] * P
+    n_done = 0
     pe = 0
-    while True:
-        c = session.claim(pe)
-        if c is None:
-            # Both runtimes only return None once the whole loop is claimed,
-            # so a single None ends the drain for every PE.
-            break
-        _run_chunk(session, pe, c, work_fn)
+    while n_done < P:
+        if not done[pe]:
+            c = session.claim(pe)
+            if c is None:
+                done[pe] = True
+                n_done += 1
+            else:
+                _run_chunk(session, pe, c, work_fn)
         pe = (pe + 1) % P
     return session.report("serial", wall_time=time.perf_counter() - t0)
 
 
 def _threads_one_sided(session, work_fn: Optional[WorkFn],
                        n_threads: Optional[int] = None):
-    """The paper's execution model: every PE claims for itself, no master."""
+    """The paper's execution model: every PE claims for itself, no master.
+
+    Hierarchical runtimes take this path too -- claims stay self-service;
+    the runtime internally routes them through the node-local window.
+    """
     n_threads = n_threads or session.spec.P
     t0 = time.perf_counter()
 
@@ -150,7 +160,10 @@ def _sim(session, costs=None, speeds=None, **sim_kw):
     ``costs``: per-iteration execution cost (length N, seconds at speed 1);
     ``speeds``: per-PE relative speed (length P, defaults to homogeneous).
     Wall time in the returned report is the *virtual* ``T_p^loop``.
+    Hierarchical sessions carry their ``nodes``/``inner_technique`` into the
+    DES and report per-level RMW counts.
     """
+    from repro.core.scheduler import HierarchicalRuntime
     from repro.core.sim import SimConfig, simulate
     from .report import SessionReport
 
@@ -159,6 +172,9 @@ def _sim(session, costs=None, speeds=None, **sim_kw):
         raise ValueError("executor='sim' needs per-iteration costs=")
     if speeds is None:
         speeds = np.ones(spec.P)
+    if isinstance(session.runtime, HierarchicalRuntime):
+        sim_kw.setdefault("nodes", session.runtime.nodes)
+        sim_kw.setdefault("inner_technique", session.runtime.inner_technique)
     r = simulate(SimConfig(spec, np.asarray(speeds), np.asarray(costs),
                            impl=session.runtime_kind, **sim_kw))
     return SessionReport(
@@ -172,4 +188,6 @@ def _sim(session, costs=None, speeds=None, **sim_kw):
         busy_time=np.asarray(r.finish, dtype=np.float64),
         wall_time=float(r.T_loop),
         n_claims=r.n_claims,
+        n_rmw_global=r.n_rmw_global,
+        n_rmw_local=r.n_rmw_local,
     )

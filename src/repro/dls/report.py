@@ -24,13 +24,19 @@ class SessionReport:
     technique: str
     N: int
     P: int
-    runtime: str  # "one_sided" | "two_sided"
+    runtime: str  # "one_sided" | "two_sided" | "hierarchical"
     executor: Optional[str]  # "serial" | "threads" | "sim" | None (manual)
     per_pe_claims: List[List[Claim]]
     per_pe_iters: np.ndarray  # iterations executed (sim) or claimed, per PE
     busy_time: np.ndarray  # seconds of work_fn execution per PE
     wall_time: float  # wall-clock of execute() (sim: virtual T_loop)
     n_claims: Optional[int] = None  # overrides len(claims) (sim executor)
+    # Per-level RMW counts (the follow-up paper's headline metric): how many
+    # window RMWs paid the global serialization point vs a node-local one.
+    # None when the window backend does not account (plain one-sided
+    # ThreadWindow); flat sessions over counting windows report local=0.
+    n_rmw_global: Optional[int] = None
+    n_rmw_local: Optional[int] = None
 
     @property
     def claims(self) -> List[Claim]:
@@ -57,9 +63,14 @@ class SessionReport:
         return coefficient_of_variation(self.busy_time)
 
     def summary(self) -> str:
+        rmw = ""
+        if self.n_rmw_global is not None:
+            rmw = f" rmw_g={self.n_rmw_global}"
+            if self.n_rmw_local is not None:
+                rmw += f" rmw_l={self.n_rmw_local}"
         return (
             f"{self.technique} N={self.N} P={self.P} [{self.runtime}"
             f"{'/' + self.executor if self.executor else ''}] "
             f"steps={self.steps} iters={self.total_iters} "
-            f"cov={self.cov:.3f} wall={self.wall_time:.3f}s"
+            f"cov={self.cov:.3f} wall={self.wall_time:.3f}s{rmw}"
         )

@@ -1,10 +1,12 @@
 """The Runtime contract: what a claim source must implement.
 
-Both protocol implementations in ``repro.core.scheduler`` --
+All three protocol implementations in ``repro.core.scheduler`` --
 ``OneSidedRuntime`` (the paper's two-fetch-add distributed chunk
-calculation) and ``TwoSidedRuntime`` (the master-worker baseline) --
-satisfy this contract, which is what lets ``DLSession`` and the executors
-treat them interchangeably.  See DESIGN.md Sec. 2.
+calculation), ``TwoSidedRuntime`` (the master-worker baseline), and
+``HierarchicalRuntime`` (two-level node/global scheduling,
+arXiv:1903.09510) -- satisfy this contract, which is what lets
+``DLSession`` and the executors treat them interchangeably.  See
+DESIGN.md Sec. 2 and 7.
 """
 from __future__ import annotations
 
@@ -19,10 +21,15 @@ except ImportError:  # pragma: no cover
         return cls
 
 from repro.core.chunk_calculus import LoopSpec
-from repro.core.rma import Window, make_window
-from repro.core.scheduler import Claim, OneSidedRuntime, TwoSidedRuntime
+from repro.core.rma import HierarchicalWindow, Window, make_window
+from repro.core.scheduler import (
+    Claim,
+    HierarchicalRuntime,
+    OneSidedRuntime,
+    TwoSidedRuntime,
+)
 
-RUNTIMES = ("one_sided", "two_sided")
+RUNTIMES = ("one_sided", "two_sided", "hierarchical")
 
 
 @runtime_checkable
@@ -56,10 +63,42 @@ def make_runtime(
     runtime: str = "one_sided",
     window=None,
     loop_id: Optional[int] = None,
+    nodes: Optional[int] = None,
+    inner_technique: Optional[str] = None,
 ) -> Runtime:
     """Build a Runtime.  ``window`` is a backend name or a ``Window`` object
     (shared across sessions for multi-claimer setups); two-sided runtimes
-    keep all state master-side and take no window."""
+    keep all state master-side and take no window.
+
+    ``runtime="hierarchical"`` needs ``nodes=`` and optionally an
+    ``inner_technique`` (default SS within the node).  Its window may be a
+    ``HierarchicalWindow``, a plain ``Window``/backend name for the *global*
+    level (node-local levels stay in-process -- on a cluster the global
+    level is the KV store and locals are per-host shared memory), or
+    ``"sim"`` for per-level clocked accounting.
+    """
+    if runtime == "hierarchical":
+        if nodes is None:
+            raise ValueError('runtime="hierarchical" requires nodes=')
+        if not isinstance(window, HierarchicalWindow):
+            if window is None or window == "thread":
+                window = HierarchicalWindow(nodes)
+            elif window == "sim":
+                window = HierarchicalWindow.sim(nodes)
+            elif isinstance(window, str):
+                window = HierarchicalWindow(nodes, global_window=make_window(window))
+            elif isinstance(window, Window):
+                window = HierarchicalWindow(nodes, global_window=window)
+            else:
+                raise TypeError(
+                    f"window must be a backend name or Window, got {window!r}")
+        return HierarchicalRuntime(spec, nodes, window,
+                                   inner_technique=inner_technique or "ss",
+                                   loop_id=loop_id)
+    if nodes is not None or inner_technique is not None:
+        raise ValueError(
+            f'nodes=/inner_technique= only apply to runtime="hierarchical", '
+            f"got runtime={runtime!r}")
     if runtime == "one_sided":
         if window is None:
             window = "thread"

@@ -28,7 +28,8 @@ from typing import Callable, Iterator, List, Optional
 import numpy as np
 
 from repro.core.chunk_calculus import WEIGHTED, LoopSpec
-from repro.core.scheduler import Claim, OneSidedRuntime
+from repro.core.rma import HierarchicalWindow, SimWindow
+from repro.core.scheduler import Claim, HierarchicalRuntime, OneSidedRuntime
 
 from .policies import UniformWeights, WeightPolicy, make_weight_policy
 from .report import SessionReport
@@ -52,11 +53,18 @@ class DLSession:
         self.runtime = runtime
         self.policy: WeightPolicy = weights if weights is not None else UniformWeights()
         self.record_metrics = record_metrics
-        self.runtime_kind = (
-            "one_sided" if isinstance(runtime, OneSidedRuntime) else "two_sided")
+        if isinstance(runtime, HierarchicalRuntime):
+            self.runtime_kind = "hierarchical"
+        elif isinstance(runtime, OneSidedRuntime):
+            self.runtime_kind = "one_sided"
+        else:
+            self.runtime_kind = "two_sided"
         self._claim_log: List[List[Claim]] = [[] for _ in range(spec.P)]
         self._busy: List[float] = [0.0] * spec.P
         self._grow_lock = threading.Lock()  # only for pe >= P growth
+        # RMW counts are reported as deltas against this baseline, so a
+        # session on a shared (or reused) window reports only its own loop.
+        self._rmw_base = self._rmw_snapshot()
         # Hot-path shortcut: with no weight policy and no metrics the session
         # claim is *exactly* the runtime claim (benchmarks/overhead.py relies
         # on per-claim overhead parity with the raw runtimes).
@@ -136,6 +144,7 @@ class DLSession:
     def report(self, executor: Optional[str] = None,
                wall_time: float = 0.0) -> SessionReport:
         """Snapshot the per-claim metrics collected so far."""
+        rmw_g, rmw_l = self._rmw_counts()
         return SessionReport(
             technique=self.spec.technique,
             N=self.spec.N,
@@ -148,7 +157,31 @@ class DLSession:
                 dtype=np.int64),
             busy_time=np.asarray(self._busy, dtype=np.float64),
             wall_time=wall_time,
+            n_rmw_global=rmw_g,
+            n_rmw_local=rmw_l,
         )
+
+    def _rmw_snapshot(self):
+        """Window RMW totals (global, local), or None if it doesn't count.
+
+        Hierarchical windows account both levels for any backend; a flat
+        one-sided session over a ``SimWindow`` reports its RMWs as global
+        (every flat claim pays the global serialization point).
+        """
+        win = getattr(self.runtime, "window", None)
+        if isinstance(win, HierarchicalWindow):
+            return win.n_rmw_global, win.n_rmw_local
+        if isinstance(win, SimWindow):
+            return win.n_rmw, 0
+        return None
+
+    def _rmw_counts(self):
+        """This session's per-level RMW counts (delta over the baseline)."""
+        snap = self._rmw_snapshot()
+        if snap is None:
+            return None, None
+        base = self._rmw_base or (0, 0)
+        return snap[0] - base[0], snap[1] - base[1]
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -160,13 +193,18 @@ class DLSession:
         window (monotonic KV backends never decrement); two-sided sessions
         rewind the master recurrence in place.
         """
-        if isinstance(self.runtime, OneSidedRuntime):
+        if isinstance(self.runtime, HierarchicalRuntime):
+            self.runtime = HierarchicalRuntime(
+                self.spec, self.runtime.nodes, self.runtime.window,
+                inner_technique=self.runtime.inner_technique, loop_id=loop_id)
+        elif isinstance(self.runtime, OneSidedRuntime):
             self.runtime = OneSidedRuntime(
                 self.spec, self.runtime.window, loop_id=loop_id)
         else:
             self.runtime.restore({"i": 0, "lp": 0})
         self._claim_log = [[] for _ in range(len(self._claim_log))]
         self._busy = [0.0] * len(self._busy)
+        self._rmw_base = self._rmw_snapshot()  # metrics restart at zero
         if not self.record_metrics and isinstance(self.policy, UniformWeights):
             self.claim = self.runtime.claim  # type: ignore[method-assign]
         return self
@@ -210,18 +248,27 @@ def loop(
     max_chunk: Optional[int] = None,
     loop_id: Optional[int] = None,
     record_metrics: bool = True,
+    nodes: Optional[int] = None,
+    inner_technique: Optional[str] = None,
 ) -> DLSession:
     """Open a DLS session over ``[0, N)`` -- the facade's front door.
 
     N, technique, P, min_chunk, max_chunk: the ``LoopSpec`` fields.
-    runtime: "one_sided" (paper protocol) | "two_sided" (master-worker).
+    runtime: "one_sided" (paper protocol) | "two_sided" (master-worker) |
+        "hierarchical" (two-level node/global scheduling; needs ``nodes=``).
     window: "thread" | "kvstore" | "sim" | "auto" | a shared ``Window``
-        object | None (thread).  Ignored by two-sided runtimes.
+        object | None (thread).  Ignored by two-sided runtimes; for
+        hierarchical runtimes this is the *global* level (or a ready
+        ``HierarchicalWindow``), node-local levels stay in-process.
     weights: None/"uniform" | "awf" | a float sequence (static WF; also
         stored on the spec) | a ``WeightBoard`` | a ``WeightPolicy``.
     loop_id: explicit counter namespace (defaults to a fresh id) -- pass a
         stable value to share one logical loop across host processes.
     record_metrics: disable to make ``claim`` a zero-overhead passthrough.
+    nodes / inner_technique: hierarchical only -- number of node-local
+        scheduling domains, and the technique used *within* a node
+        (defaults to SS; ``technique`` becomes the outer, super-chunk-level
+        technique).  Rejected for flat runtimes.
     """
     spec_weights = None
     if (weights is not None and not isinstance(weights, str)
@@ -229,9 +276,12 @@ def loop(
         spec_weights = tuple(float(w) for w in weights)
     spec = LoopSpec(technique, N=N, P=P, weights=spec_weights,
                     min_chunk=min_chunk, max_chunk=max_chunk)
-    rt = make_runtime(spec, runtime=runtime, window=window, loop_id=loop_id)
+    rt = make_runtime(spec, runtime=runtime, window=window, loop_id=loop_id,
+                      nodes=nodes, inner_technique=inner_technique)
     policy = make_weight_policy(weights, P)
-    if weights is not None and technique not in WEIGHTED \
+    weighted = technique in WEIGHTED or (
+        runtime == "hierarchical" and (inner_technique or "ss") in WEIGHTED)
+    if weights is not None and not weighted \
             and not isinstance(policy, UniformWeights):
         warnings.warn(
             f"technique {technique!r} ignores weights (only {WEIGHTED} use "

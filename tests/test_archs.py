@@ -2,11 +2,17 @@
 decode step on CPU, asserting output shapes and no NaNs.
 
 The FULL configs are exercised only by the dry-run (ShapeDtypeStruct level).
+
+The whole matrix jit-compiles ~2 minutes of models on CPU, so it lives in
+the slow tier; the tier-1 suite covers the model plane through the dry-run
+and the kernel/substrate tests.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import ARCHS, applicable_shapes, get_config
 from repro.models import api

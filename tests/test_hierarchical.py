@@ -1,0 +1,218 @@
+"""Tentpole tests: the hierarchical two-level runtime through every surface.
+
+Conservation itself is hammered by ``test_invariants.py``; this module
+locks the hierarchical-specific contracts -- the facade entry point, the
+per-level RMW accounting, the window composition, node mapping, lifecycle
+(reset/state/restore), and the argument validation.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro import dls
+from repro.core import (
+    HierarchicalRuntime,
+    HierarchicalWindow,
+    LoopSpec,
+    SimWindow,
+    ThreadWindow,
+)
+
+
+def test_facade_acceptance_shape_drains():
+    """The ISSUE's acceptance call: gss / P=288 / hierarchical / nodes=8."""
+    N = 5_000
+    hits = np.zeros(N, np.int64)
+    lock = threading.Lock()
+
+    def work(a, b):
+        with lock:
+            hits[a:b] += 1
+
+    s = dls.loop(N, technique="gss", P=288, runtime="hierarchical", nodes=8)
+    report = s.execute(work, executor="threads", n_threads=16)
+    assert (hits == 1).all()
+    assert report.runtime == "hierarchical"
+    assert report.total_iters == N
+    assert s.drained() and s.remaining() == 0
+
+
+def test_report_carries_per_level_rmw_counts():
+    s = dls.loop(2_000, technique="gss", P=8, runtime="hierarchical", nodes=2)
+    report = s.execute(lambda a, b: None, executor="serial")
+    assert report.n_rmw_global is not None and report.n_rmw_global > 0
+    assert report.n_rmw_local is not None
+    # local sub-scheduling must dominate: global RMWs are 2 per super-chunk
+    assert report.n_rmw_local > report.n_rmw_global
+    assert f"rmw_g={report.n_rmw_global}" in report.summary()
+
+
+def test_sim_executor_reports_rmw_reduction_vs_flat():
+    N, P = 4_000, 64
+    costs = np.full(N, 1e-3)
+    flat = dls.loop(N, technique="ss", P=P).execute(
+        None, executor="sim", costs=costs)
+    hier = dls.loop(N, technique="gss", P=P, runtime="hierarchical",
+                    nodes=8).execute(None, executor="sim", costs=costs)
+    assert flat.total_iters == hier.total_iters == N
+    assert hier.n_rmw_global * 2 <= flat.n_rmw_global
+    assert hier.n_rmw_local > 0 and flat.n_rmw_local == 0
+
+
+def test_flat_sim_window_counts_as_global():
+    s = dls.loop(500, technique="ss", P=4, window="sim")
+    report = s.execute(lambda a, b: None, executor="serial")
+    assert report.n_rmw_global == s.runtime.window.n_rmw > 0
+    assert report.n_rmw_local == 0
+
+
+def test_hierarchical_window_accounting_and_clocks():
+    win = HierarchicalWindow.sim(2, o_rma_global=1e-5, o_rma_local=1e-7)
+    rt = HierarchicalRuntime(LoopSpec("gss", N=1_000, P=8), nodes=2,
+                             window=win)
+    while any(rt.claim(pe) for pe in range(8)):
+        pass
+    assert win.n_rmw_global > 0 and win.n_rmw_local > 0
+    clocks = win.clocks()
+    assert clocks["global"] == pytest.approx(win.n_rmw_global * 1e-5)
+    assert clocks["local"] > 0
+    win.reset_clock()
+    assert win.n_rmw_global == win.n_rmw_local == 0
+    assert win.clocks() == {"global": 0.0, "local": 0.0}
+
+
+def test_sim_window_reset_clock():
+    w = SimWindow(o_rma=1e-6)
+    w.fetch_add("k", 1)
+    assert w.n_rmw == 1 and w.clock == pytest.approx(1e-6)
+    w.reset_clock()
+    assert w.n_rmw == 0 and w.clock == 0.0
+    assert w.read("k") == 1  # counters survive; only accounting resets
+
+
+def test_node_mapping_contiguous_and_total():
+    rt = HierarchicalRuntime(LoopSpec("gss", N=100, P=10), nodes=3)
+    nodes = [rt.node_of(pe) for pe in range(10)]
+    assert nodes == sorted(nodes)  # contiguous blocks
+    assert set(nodes) == {0, 1, 2}  # every node populated
+    # out-of-range PEs clamp instead of crashing (session _ensure_pe growth)
+    assert rt.node_of(99) == 2
+
+
+def test_outer_technique_runs_over_nodes():
+    """The outer spec is the session technique with P=nodes: with GSS the
+    first super-chunk is ~N/nodes, far larger than any flat chunk."""
+    rt = HierarchicalRuntime(LoopSpec("gss", N=10_000, P=100), nodes=4)
+    first = rt.claim(0)
+    assert first is not None
+    assert first.size == 1  # the local claim itself is SS-sized
+    # ...but the node's super-chunk grabbed GSS(K_0) = N/nodes globally
+    assert rt.window.read(rt._gl) == 2_500
+    # and nothing is lost: super-chunk remainder + global tail == N - 1
+    assert rt.remaining_lower_bound() == 10_000 - 1
+
+
+def test_reset_restarts_rmw_accounting():
+    """reset() must clear metrics: the second loop's RMW counts start at
+    zero instead of inheriting the first loop's totals from the window."""
+    s = dls.loop(2_000, technique="gss", P=8, runtime="hierarchical",
+                 nodes=2, window="sim")
+    r1 = s.execute(lambda a, b: None, executor="serial")
+    s.reset()
+    r2 = s.execute(lambda a, b: None, executor="serial")
+    assert r2.n_rmw_global == r1.n_rmw_global  # same loop, not 2x
+    assert r2.n_rmw_local == r1.n_rmw_local
+
+
+def test_des_hierarchical_honors_weights():
+    """WF over nodes in the DES: with weights matching the speed mix, the
+    weighted schedule balances the nodes (the DES must aggregate weights
+    exactly like HierarchicalRuntime, not silently simulate uniform)."""
+    from repro.core import SimConfig, simulate
+
+    N, P = 8_000, 8
+    speeds = np.array([2.0] * 4 + [0.5] * 4)  # node 0 fast, node 1 slow
+    costs = np.full(N, 1e-3)
+    w = tuple([2.0] * 4 + [0.5] * 4)
+    wr = simulate(SimConfig(
+        LoopSpec("wf", N=N, P=P, weights=w), speeds, costs,
+        impl="hierarchical", nodes=2, inner_technique="ss"))
+    ur = simulate(SimConfig(
+        LoopSpec("wf", N=N, P=P), speeds, costs,
+        impl="hierarchical", nodes=2, inner_technique="ss"))
+    assert wr.per_pe_iters.sum() == ur.per_pe_iters.sum() == N
+    # weighted super-chunks keep the slow node's share near speed-parity
+    # and collapse the finish-time imbalance vs uniform weights
+    assert wr.T_loop < ur.T_loop
+    assert wr.cov < 0.5 * ur.cov
+    assert wr.per_pe_iters[:4].sum() > ur.per_pe_iters[:4].sum()
+
+
+def test_reset_opens_fresh_loop_on_same_window():
+    s = dls.loop(800, technique="gss", P=8, runtime="hierarchical", nodes=2)
+    assert sum(c.size for pe in range(8) for c in s.claims(pe)) == 800
+    s.reset()
+    assert s.remaining() == 800
+    assert sum(c.size for pe in range(8) for c in s.claims(pe)) == 800
+
+
+def test_session_state_restore_roundtrip_hierarchical():
+    s = dls.loop(2_000, technique="gss", P=8, runtime="hierarchical", nodes=2)
+    served = sum(s.claim(pe).size for pe in (0, 1, 4, 5))
+    st = s.state()
+    s2 = dls.loop(2_000, technique="gss", P=8, runtime="hierarchical",
+                  nodes=2)
+    s2.restore(st)
+    tail = 0
+    done = [False] * 8
+    while not all(done):
+        for pe in range(8):
+            if not done[pe]:
+                c = s2.claim(pe)
+                if c is None:
+                    done[pe] = True
+                else:
+                    tail += c.size
+    assert served + tail == 2_000
+
+
+def test_weighted_outer_aggregates_node_weights():
+    """WF over nodes: per-PE weights aggregate to node weights summing to
+    ``nodes``, so fast nodes get proportionally larger super-chunks."""
+    w = tuple([2.0] * 4 + [0.5] * 4)  # node 0 fast, node 1 slow (sum != P ok)
+    rt = HierarchicalRuntime(LoopSpec("wf", N=10_000, P=8, weights=w),
+                             nodes=2)
+    ow = rt._outer_spec.weights
+    assert len(ow) == 2
+    assert ow[0] > ow[1]
+    assert sum(ow) == pytest.approx(2.0)
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="nodes"):
+        dls.loop(100, technique="gss", P=4, runtime="hierarchical")
+    with pytest.raises(ValueError, match="nodes"):
+        dls.loop(100, technique="gss", P=4, runtime="one_sided", nodes=2)
+    with pytest.raises(ValueError, match="inner_technique"):
+        dls.loop(100, technique="gss", P=4, inner_technique="tss")
+    with pytest.raises(ValueError, match="nodes must be in"):
+        HierarchicalRuntime(LoopSpec("gss", N=100, P=4), nodes=8)
+    with pytest.raises(ValueError, match="inner technique"):
+        HierarchicalRuntime(LoopSpec("gss", N=100, P=4), nodes=2,
+                            inner_technique="nope")
+    with pytest.raises(ValueError, match="node levels"):
+        HierarchicalRuntime(LoopSpec("gss", N=100, P=4), nodes=2,
+                            window=HierarchicalWindow(3))
+
+
+def test_plain_window_becomes_global_level():
+    """Passing a flat Window uses it as the global level -- the deployment
+    shape where the global window is the KV store and locals are in-process."""
+    g = ThreadWindow()
+    s = dls.loop(600, technique="gss", P=6, runtime="hierarchical", nodes=2,
+                 window=g)
+    assert s.runtime.window.global_window is g
+    assert sum(c.size for pe in range(6) for c in s.claims(pe)) == 600
+    # the global window carries only the outer counters (super-chunk claims)
+    assert any("lp" in k for k in g._v)

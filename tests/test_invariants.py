@@ -1,0 +1,255 @@
+"""Property-based conservation harness (the paper's partition property).
+
+The one invariant every layer of this repo rests on: for ANY technique x
+runtime x window backend, the claims handed out over ``[0, N)`` exactly
+partition it -- no gap, no overlap, sizes summing to N -- no matter how
+claims interleave.
+
+Two layers:
+
+  * a deterministic seeded case grid that always runs (so the harness
+    guards every environment, including ones without hypothesis), and
+  * hypothesis fuzzing over the same properties when hypothesis is
+    importable -- CI runs this file both with and without hypothesis to
+    keep the degraded path collectable.
+
+Threaded cases widen the race windows with ``ThreadWindow(rmw_latency=...)``
+so lost-update bugs in the fetch-add protocol (or the hierarchical epoch
+protocol) have a real chance to fire.  Deep cases carry the ``slow``
+marker; the default tier keeps example counts inside the tier-1 budget.
+"""
+import random
+import threading
+
+import numpy as np
+import pytest
+
+from repro import dls
+from repro.core import HierarchicalWindow, ThreadWindow
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised by the no-hypothesis CI job
+    HAVE_HYPOTHESIS = False
+
+RUNTIMES = ("one_sided", "two_sided", "hierarchical")
+
+
+# ---------------------------------------------------------------------------
+# shared checkers
+# ---------------------------------------------------------------------------
+
+
+def assert_partition(claims, N):
+    """Claims exactly partition [0, N): no gap, no overlap, sizes sum N."""
+    assert claims, "no claims handed out"
+    ivals = sorted((c.start, c.stop) for c in claims)
+    assert ivals[0][0] == 0, f"first claim starts at {ivals[0][0]}"
+    assert ivals[-1][1] == N, f"last claim stops at {ivals[-1][1]} != {N}"
+    for (_, b0), (a1, _) in zip(ivals, ivals[1:]):
+        assert b0 == a1, f"gap or overlap at {b0} vs {a1}"
+    assert sum(c.size for c in claims) == N
+
+
+def drain_serial(session):
+    """Round-robin drain with per-PE retirement (hierarchical drains per node)."""
+    P = session.spec.P
+    claims = []
+    done = [False] * P
+    n_done = 0
+    pe = 0
+    while n_done < P:
+        if not done[pe]:
+            c = session.claim(pe)
+            if c is None:
+                done[pe] = True
+                n_done += 1
+            else:
+                claims.append(c)
+        pe = (pe + 1) % P
+    return claims
+
+
+def drain_threads(session, n_threads, hits):
+    lock = threading.Lock()
+    claims = []
+
+    def worker(pe):
+        while True:
+            c = session.claim(pe)
+            if c is None:
+                return
+            with lock:
+                hits[c.start:c.stop] += 1
+                claims.append(c)
+
+    ts = [threading.Thread(target=worker, args=(j,)) for j in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    return claims
+
+
+def session_for(case, runtime, window=None):
+    kw = dict(technique=case["technique"], P=case["P"],
+              min_chunk=case["min_chunk"], max_chunk=case["max_chunk"],
+              runtime=runtime, window=window)
+    if runtime == "hierarchical":
+        kw.update(nodes=case["nodes"], inner_technique=case["inner"])
+    return dls.loop(case["N"], **kw)
+
+
+def make_case(rng, max_n):
+    P = rng.randint(1, 12)
+    return dict(
+        technique=rng.choice(dls.TECHNIQUES),
+        N=rng.randint(1, max_n),
+        P=P,
+        min_chunk=rng.choice([1, 1, 1, 2, 7]),
+        max_chunk=rng.choice([None, None, None, 64]),
+        nodes=rng.randint(1, P),
+        inner=rng.choice(["ss", "gss", "fac2", "tss"]),
+    )
+
+
+# Deterministic grid: seeded draws + the degenerate corners that bite.
+_rng = random.Random(20260801)
+CASES = [make_case(_rng, 4_000) for _ in range(24)] + [
+    dict(technique="gss", N=1, P=1, min_chunk=1, max_chunk=None,
+         nodes=1, inner="ss"),
+    dict(technique="fac2", N=7, P=12, min_chunk=1, max_chunk=None,
+         nodes=12, inner="gss"),
+    dict(technique="tss", N=97, P=8, min_chunk=3, max_chunk=5,
+         nodes=3, inner="tss"),
+    dict(technique="ss", N=500, P=6, min_chunk=2, max_chunk=None,
+         nodes=2, inner="fac2"),
+]
+
+
+# ---------------------------------------------------------------------------
+# always-on layer (no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("runtime", RUNTIMES)
+def test_serial_claims_partition_grid(runtime):
+    for case in CASES:
+        claims = drain_serial(session_for(case, runtime))
+        assert_partition(claims, case["N"])
+
+
+@pytest.mark.parametrize("runtime", ["one_sided", "hierarchical"])
+def test_threaded_partition_widened_races_grid(runtime):
+    """Concurrent claimers over latency-widened windows still partition."""
+    rng = random.Random(7)
+    for _ in range(6):
+        case = make_case(rng, 600)
+        if runtime == "hierarchical":
+            window = HierarchicalWindow(
+                case["nodes"], ThreadWindow(rmw_latency=2e-5),
+                [ThreadWindow(rmw_latency=1e-5) for _ in range(case["nodes"])])
+        else:
+            window = ThreadWindow(rmw_latency=1e-5)
+        session = session_for(case, runtime, window=window)
+        hits = np.zeros(case["N"], np.int64)
+        claims = drain_threads(session, case["P"], hits)
+        assert (hits == 1).all(), np.flatnonzero(hits != 1)[:10]
+        assert_partition(claims, case["N"])
+
+
+@pytest.mark.parametrize("window", ["thread", "sim"])
+def test_window_backends_conserve_grid(window):
+    """The invariant is backend-independent (thread vs clocked sim window)."""
+    for case in CASES[:12]:
+        for runtime in ("one_sided", "hierarchical"):
+            claims = drain_serial(session_for(case, runtime, window=window))
+            assert_partition(claims, case["N"])
+
+
+def test_hierarchical_state_restore_conserves_grid():
+    """Checkpoint mid-loop, restore elsewhere: served + tail == N, disjoint."""
+    rng = random.Random(11)
+    for _ in range(8):
+        case = make_case(rng, 4_000)
+        cut = rng.randint(0, 30)
+        src = session_for(case, "hierarchical")
+        served = []
+        for j in range(cut):
+            c = src.claim(j % case["P"])
+            if c is None:
+                break
+            served.append(c)
+        dst = session_for(case, "hierarchical")
+        dst.restore(src.state())
+        assert_partition(served + drain_serial(dst), case["N"])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer (fuzzing over the same properties)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    COMMON = dict(suppress_health_check=[HealthCheck.too_slow], deadline=None)
+
+    @st.composite
+    def loop_cases(draw, max_n=4_000):
+        P = draw(st.integers(min_value=1, max_value=12))
+        return dict(
+            technique=draw(st.sampled_from(dls.TECHNIQUES)),
+            N=draw(st.integers(min_value=1, max_value=max_n)),
+            P=P,
+            min_chunk=draw(st.sampled_from([1, 1, 1, 2, 7])),
+            max_chunk=draw(st.sampled_from([None, None, None, 64])),
+            nodes=draw(st.integers(min_value=1, max_value=P)),
+            inner=draw(st.sampled_from(["ss", "gss", "fac2", "tss"])),
+        )
+
+    @pytest.mark.parametrize("runtime", RUNTIMES)
+    @settings(max_examples=25, **COMMON)
+    @given(case=loop_cases())
+    def test_serial_claims_partition_fuzz(runtime, case):
+        claims = drain_serial(session_for(case, runtime))
+        assert_partition(claims, case["N"])
+
+    @pytest.mark.parametrize("runtime", ["one_sided", "hierarchical"])
+    @settings(max_examples=8, **COMMON)
+    @given(case=loop_cases(max_n=500))
+    def test_threaded_partition_widened_races_fuzz(runtime, case):
+        if runtime == "hierarchical":
+            window = HierarchicalWindow(
+                case["nodes"], ThreadWindow(rmw_latency=2e-5),
+                [ThreadWindow(rmw_latency=1e-5) for _ in range(case["nodes"])])
+        else:
+            window = ThreadWindow(rmw_latency=1e-5)
+        session = session_for(case, runtime, window=window)
+        hits = np.zeros(case["N"], np.int64)
+        claims = drain_threads(session, case["P"], hits)
+        assert (hits == 1).all(), np.flatnonzero(hits != 1)[:10]
+        assert_partition(claims, case["N"])
+
+    @settings(max_examples=20, **COMMON)
+    @given(case=loop_cases(), cut=st.integers(min_value=0, max_value=30))
+    def test_hierarchical_state_restore_conserves_fuzz(case, cut):
+        src = session_for(case, "hierarchical")
+        served = []
+        for j in range(cut):
+            c = src.claim(j % case["P"])
+            if c is None:
+                break
+            served.append(c)
+        dst = session_for(case, "hierarchical")
+        dst.restore(src.state())
+        assert_partition(served + drain_serial(dst), case["N"])
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("runtime", RUNTIMES)
+    @settings(max_examples=200, **COMMON)
+    @given(case=loop_cases(max_n=20_000))
+    def test_serial_claims_partition_deep(runtime, case):
+        """The same invariant, hammered (slow tier)."""
+        claims = drain_serial(session_for(case, runtime))
+        assert_partition(claims, case["N"])

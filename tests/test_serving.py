@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import ModelConfig
 from repro.models import api
@@ -14,6 +15,7 @@ def _cfg():
                        dtype="float32")
 
 
+@pytest.mark.slow
 def test_generate_matches_stepwise_greedy():
     """Engine.generate == manual prefill + argmax decode loop."""
     cfg = _cfg()

@@ -4,6 +4,10 @@ The quantitative band test (`test_psia_grid_within_band`) checks the
 calibrated simulator against every T_p^loop the paper quotes numerically
 (Sec. 5) to within 10%.  The qualitative tests assert the paper's headline
 claims independent of calibration.
+
+The 288k-iteration PSIA sims carry the ``slow`` marker (run them with
+``pytest -m slow``); the same ordering invariants are locked at tier-1
+scale in ``test_sim_regressions.py``.
 """
 import numpy as np
 import pytest
@@ -59,6 +63,7 @@ PAPER_GRID = [
 
 
 @pytest.mark.parametrize("tech,impl,ratio,coord,target", PAPER_GRID)
+@pytest.mark.slow
 def test_psia_grid_within_band(tech, impl, ratio, coord, target, psia):
     r = run(tech, impl, ratio, coord, psia)
     assert r.T_loop == pytest.approx(target, rel=0.10), (
@@ -69,6 +74,7 @@ def test_psia_grid_within_band(tech, impl, ratio, coord, target, psia):
 # ---- qualitative claims (calibration-independent) ----
 
 
+@pytest.mark.slow
 def test_slow_master_hurts_two_sided_ss(psia):
     """Paper headline: SS 109s one-sided vs 233s two-sided with KNL master."""
     one = run("ss", "one_sided", "2:1", "knl", psia)
@@ -76,6 +82,7 @@ def test_slow_master_hurts_two_sided_ss(psia):
     assert two.T_loop > 1.8 * one.T_loop
 
 
+@pytest.mark.slow
 def test_one_sided_insensitive_to_coordinator_placement(psia):
     """Fig. 4/5: One_Sided performs equally with coordinator on KNL or Xeon."""
     for tech in ["ss", "gss", "tss", "fac2", "wf"]:
@@ -84,6 +91,7 @@ def test_one_sided_insensitive_to_coordinator_placement(psia):
         assert a.T_loop == pytest.approx(b.T_loop, rel=0.05), tech
 
 
+@pytest.mark.slow
 def test_two_sided_sensitive_to_master_placement(psia):
     """Two_Sided SS degrades >50% moving the master from Xeon to KNL."""
     knl = run("ss", "two_sided", "2:1", "knl", psia)
@@ -91,6 +99,7 @@ def test_two_sided_sensitive_to_master_placement(psia):
     assert knl.T_loop > 1.5 * xeon.T_loop
 
 
+@pytest.mark.slow
 def test_wf_least_sensitive_among_techniques(psia):
     """Paper 2nd observation: factoring-based WF barely reacts to placement."""
     def sensitivity(tech):
@@ -102,6 +111,7 @@ def test_wf_least_sensitive_among_techniques(psia):
     assert sensitivity("wf") < 1.25
 
 
+@pytest.mark.slow
 def test_more_xeons_help_one_sided(psia):
     """Paper: 1:2 ratio cuts One_Sided SS from 109s to 68.5s."""
     a = run("ss", "one_sided", "2:1", "knl", psia)
@@ -109,6 +119,7 @@ def test_more_xeons_help_one_sided(psia):
     assert b.T_loop < 0.75 * a.T_loop
 
 
+@pytest.mark.slow
 def test_one_sided_claim_latency_much_lower(psia):
     one = run("ss", "one_sided", "2:1", "knl", psia)
     two = run("ss", "two_sided", "2:1", "knl", psia)
@@ -121,6 +132,7 @@ def test_partition_conserved_in_sim(psia):
         assert r.per_pe_iters.sum() == N
 
 
+@pytest.mark.slow
 def test_ss_best_balance_worst_overhead(psia):
     ss = run("ss", "one_sided", "2:1", "knl", psia)
     gss = run("gss", "one_sided", "2:1", "knl", psia)

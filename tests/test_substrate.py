@@ -186,6 +186,7 @@ def test_trainer_loss_decreases(tmp_path):
     assert last5 < first5
 
 
+@pytest.mark.slow
 def test_trainer_checkpoint_resume_exact(tmp_path):
     from repro.train import TrainConfig, Trainer
 
