@@ -1,0 +1,165 @@
+"""Adaptive vs static scheduling under wrong / drifting PE speeds.
+
+The adaptive techniques (AF, AWF-B/C/D/E -- arXiv:1804.11115's rows) exist
+for exactly one failure mode of static WF: the supplied weights stop
+matching reality.  Two experiments:
+
+1. **Stale calibration (DES)**: static WF carries weights measured on a
+   *previous* incarnation of the cluster -- the PEs that were fast are
+   now the 2x-slow ones.  WF keeps handing the slow PEs double chunks;
+   the adaptive variants measure reality online and rebalance.
+   Deterministic (seeded DES, EXPERIMENTS.md noise/lag model).
+
+2. **Drifting speeds, timestepped (virtual-time session driver)**: the
+   adaptive family's home turf (Carino & Banicescu 2008) -- the same
+   loop re-executed every timestep while PE speeds drift *between*
+   steps (power-rebalance model: the initially-throttled half recovers
+   while the initially-fast half throttles, inverting the ranking).
+   Static WF is calibrated *correctly for step 0* and goes stale; the
+   adaptive policies carry one telemetry plane across steps and track
+   the drift.  The driver executes real ``dls.loop`` sessions
+   claim-by-claim on a virtual clock -- real runtimes, real policies,
+   real ``PerfModel`` telemetry; only the chunk execution times are
+   synthetic -- so the comparison is deterministic and measures
+   adaptation, not OS jitter.
+
+Run:  PYTHONPATH=src python benchmarks/adaptive.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+
+import numpy as np
+
+from repro import dls
+from repro.core import LoopSpec, SimConfig, simulate, weights_from_speeds
+
+ADAPTIVE_ROWS = ("af", "awf_b", "awf_c", "awf_d", "awf_e")
+
+
+# ---------------------------------------------------------------------------
+# Part 1: stale static calibration (DES, roles swapped since calibration)
+# ---------------------------------------------------------------------------
+
+
+def stale_calibration(N=20_000, P=16, n_slow=4, seed=7):
+    speeds = np.ones(P)
+    speeds[-n_slow:] = 0.5
+    # WF's weights were measured when today's slow PEs were the 2x-fast
+    # ones -- stale calibration favors exactly the wrong cores.
+    stale = weights_from_speeds(1.0 / speeds)
+    costs = np.full(N, 2e-3)
+    rows = []
+    for tech, w in [("fac2", None), ("wf", tuple(stale))] + \
+            [(t, None) for t in ADAPTIVE_ROWS]:
+        r = simulate(SimConfig(LoopSpec(tech, N=N, P=P, weights=w),
+                               speeds, costs, impl="one_sided", seed=seed))
+        rows.append((tech, r.T_loop, r.cov, r.n_claims))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Part 2: drifting speeds across timesteps (virtual-time session driver)
+# ---------------------------------------------------------------------------
+
+
+def drift_speed(pe: int, step: int, P: int, tau_steps: float = 1.5) -> float:
+    """Power-rebalance drift: the initially-throttled lower half recovers
+    0.5 -> 1.0 while the initially-fast upper half throttles hard,
+    1.0 -> 0.2 (power cap), with time constant ``tau_steps`` timesteps."""
+    decay = math.exp(-step / tau_steps)
+    if pe < P - P // 2:
+        return 1.0 + (0.5 - 1.0) * decay  # 0.5 -> 1.0
+    return 0.2 + (1.0 - 0.2) * decay  # 1.0 -> 0.2
+
+
+def initial_speeds(P: int) -> np.ndarray:
+    return np.array([drift_speed(pe, 0, P) for pe in range(P)])
+
+
+def _drain_virtual(session, speeds: np.ndarray, mean_cost: float,
+                   o_issue: float = 2e-4) -> float:
+    """Drain one session on a virtual clock: the next-free PE claims, its
+    chunk 'executes' for size*cost/speed virtual seconds (+ a per-claim
+    issue cost), and the measured time feeds ``session.record`` -- the
+    policy sees exactly what a wall-clock run would see, minus noise.
+    Returns the step's parallel loop time (max PE finish)."""
+    P = len(speeds)
+    vt = np.zeros(P)
+    done = np.zeros(P, dtype=bool)
+    while not done.all():
+        pe = int(np.argmin(np.where(done, np.inf, vt)))
+        c = session.claim(pe)
+        if c is None:
+            done[pe] = True
+            continue
+        secs = c.size * mean_cost / speeds[pe]
+        vt[pe] += secs + o_issue / speeds[pe]
+        session.record(pe, c.size, secs, sched_seconds=o_issue / speeds[pe])
+    return float(vt.max())
+
+
+def run_timestepped(technique: str, weights, N: int, P: int, steps: int,
+                    mean_cost: float = 1e-3, min_chunk: int = 8) -> dict:
+    """``steps`` executions of the same N-iteration loop (a timestepped
+    application), PE speeds drifting between steps.  One policy object --
+    one telemetry plane -- carries across all steps."""
+    policy = dls.make_weight_policy(weights, P)
+    total = 0.0
+    claims = 0
+    for s in range(steps):
+        speeds = np.array([drift_speed(pe, s, P) for pe in range(P)])
+        session = dls.loop(N, technique=technique, P=P, weights=policy,
+                           min_chunk=min_chunk)
+        total += _drain_virtual(session, speeds, mean_cost)
+        report = session.report("virtual")
+        claims += report.steps
+        session.advance_timestep()  # timestep-granular policies update here
+    updates = getattr(policy, "n_updates", 0)
+    return dict(T_total=total, claims=claims, updates=updates)
+
+
+def drifting(N=8_000, P=16, steps=10):
+    # Static WF calibrated *correctly for step 0*; the drift then inverts
+    # the speed ranking, so the calibration goes stale mid-run.  The
+    # adaptive rows start blind (uniform) and measure.
+    wf_weights = tuple(weights_from_speeds(initial_speeds(P)))
+    rows = []
+    for tech, weights in [("wf", wf_weights), ("awf", "awf")] + \
+            [(t, t) for t in ADAPTIVE_ROWS]:
+        r = run_timestepped(tech, weights, N, P, steps)
+        rows.append((tech, r["T_total"], r["claims"], r["updates"]))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    N1, (N2, steps) = (8_000, (4_000, 6)) if args.quick else \
+        (20_000, (8_000, 10))
+
+    print("== Part 1: stale WF calibration (DES, 4/16 PEs now 0.5x) ==")
+    print(f"{'technique':10s} {'T_loop':>9s} {'cov':>7s} {'claims':>7s}")
+    rows = stale_calibration(N=N1)
+    t_wf = dict((t, T) for t, T, *_ in rows)["wf"]
+    for tech, T, cov, n in rows:
+        gain = f"{t_wf / T:6.3f}x vs wf" if tech != "wf" else ""
+        print(f"{tech:10s} {T:9.3f} {cov:7.3f} {n:7d}  {gain}")
+
+    print(f"\n== Part 2: drifting speeds over {steps} timesteps "
+          f"(ranking inverts) ==")
+    print(f"{'technique':10s} {'T_total':>9s} {'claims':>7s} {'updates':>8s}")
+    rows = drifting(N=N2, steps=steps)
+    t_wf = dict((t, T) for t, T, *_ in rows)["wf"]
+    best = min(T for t, T, *_ in rows if t != "wf")
+    for tech, T, n, u in rows:
+        gain = f"{t_wf / T:6.3f}x vs wf" if tech != "wf" else ""
+        print(f"{tech:10s} {T:9.3f} {n:7d} {u:8d}  {gain}")
+    print(f"\nbest adaptive beats static wf by {t_wf / best:.3f}x "
+          f"under drift")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+#!/usr/bin/env python
+"""Print the markdown technique table README.md / DESIGN.md embed.
+
+The table is generated from ``chunk_calculus.TECHNIQUE_INFO`` -- the single
+source of truth for the technique roster -- and drift-checked by
+``tests/test_docs.py`` (CI's docs-consistency job).  To update the docs:
+
+    PYTHONPATH=src python scripts/gen_technique_table.py
+
+and paste the output between the ``<!-- technique-table-start/end -->``
+markers in README.md and DESIGN.md.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.chunk_calculus import technique_table  # noqa: E402
+
+if __name__ == "__main__":
+    print(technique_table())

@@ -12,9 +12,14 @@ this package is the implementation layer.  ``run_threaded_*`` remain here
 only as deprecation shims over ``repro.dls``.
 """
 from .chunk_calculus import (  # noqa: F401
+    ADAPTIVE,
+    AWF_VARIANTS,
+    TECHNIQUE_INFO,
     TECHNIQUES,
     WEIGHTED,
+    AFStats,
     LoopSpec,
+    af_chunk_size,
     chunk_series_recurrence,
     chunk_size_closed,
     chunk_sizes_closed,
@@ -22,6 +27,7 @@ from .chunk_calculus import (  # noqa: F401
     plan,
     plan_jax,
     scheduling_steps,
+    technique_table,
     tss_constants,
 )
 from .rma import (  # noqa: F401
@@ -51,4 +57,12 @@ from .sim import (  # noqa: F401
     psia_costs,
     simulate,
 )
-from .weights import WeightBoard, coefficient_of_variation, weights_from_speeds  # noqa: F401
+from .weights import (  # noqa: F401
+    AdaptiveFactoringModel,
+    AdaptiveWeightModel,
+    PerfModel,
+    WapTracker,
+    WeightBoard,
+    coefficient_of_variation,
+    weights_from_speeds,
+)

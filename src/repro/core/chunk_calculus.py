@@ -19,7 +19,12 @@ Eleliemy & Ciorba 2018): for each self-scheduling technique it provides
 
 Techniques: STATIC, SS, GSS, TSS, FAC2, WF (paper) + TFSS, AWF (beyond
 paper; Chronopoulos 2005 / Banicescu 2003 -- the paper cites both families
-as derived work).
+as derived work) + the *adaptive* family of the verification study
+(Mohammed et al., arXiv:1804.11115): AF (Banicescu & Liu 2000) and the
+AWF batch/chunk variants AWF-B/C/D/E (Carino & Banicescu 2008).  The
+adaptive forms measure PE performance online -- the telemetry layer lives
+in ``core/weights.py`` (``PerfModel``), see DESIGN.md Sec. 8; this module
+holds only the per-claim chunk math.
 
 Everything here is host-plane math over integers; numpy is the default
 backend.  ``chunk_sizes_closed`` also accepts ``jnp`` arrays and is
@@ -29,14 +34,102 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
-TECHNIQUES = ("static", "ss", "gss", "tss", "fac2", "wf", "tfss", "awf")
+#: Single source of truth for the technique roster.  Every name dispatched
+#: anywhere in the repo (runtimes, DES, planner, facade, docs tables) comes
+#: from this registry; README.md / DESIGN.md tables are generated from it
+#: (``technique_table()``) and CI fails if they drift (tests/test_docs.py).
+TECHNIQUE_INFO = {
+    "static": dict(label="Static", summary="one ceil(N/P) block per PE",
+                   source="paper Table 2"),
+    "ss": dict(label="SS", summary="self-scheduling, min_chunk per claim",
+               source="paper Table 2"),
+    "gss": dict(label="GSS", summary="guided: ceil of 1/P of the remainder",
+                source="paper Eq. 1"),
+    "tss": dict(label="TSS", summary="trapezoid: linear ramp K_0 -> 1",
+                source="paper Eq. 2"),
+    "fac2": dict(label="FAC2", summary="factoring: batches halving the "
+                 "remainder, split P ways", source="paper Eq. 3"),
+    "wf": dict(label="WF", summary="FAC2 scaled by static PE weights",
+               source="paper Table 2"),
+    "tfss": dict(label="TFSS", summary="trapezoid factoring: batches of P "
+                 "mean-TSS chunks", source="Chronopoulos 2005"),
+    "awf": dict(label="AWF", summary="WF with timestep-measured weights "
+                "(EMA WeightBoard)", source="Banicescu 2003"),
+    "af": dict(label="AF", summary="adaptive factoring from measured "
+               "per-PE (mu, sigma)", source="Banicescu & Liu 2000"),
+    "awf_b": dict(label="AWF-B", summary="AWF reweighted every batch",
+                  source="Carino & Banicescu 2008"),
+    "awf_c": dict(label="AWF-C", summary="AWF reweighted every chunk",
+                  source="Carino & Banicescu 2008"),
+    "awf_d": dict(label="AWF-D", summary="AWF-B timing compute + scheduling "
+                  "overhead", source="Carino & Banicescu 2008"),
+    "awf_e": dict(label="AWF-E", summary="AWF-C timing compute + scheduling "
+                  "overhead", source="Carino & Banicescu 2008"),
+}
 
-# Techniques whose chunk size depends on the claiming PE's weight.
-WEIGHTED = ("wf", "awf")
+TECHNIQUES = tuple(TECHNIQUE_INFO)
+
+# Techniques whose chunk size depends on the claiming PE's weight
+# (the WF closed form scaled by a static or live weight).
+WEIGHTED = ("wf", "awf", "awf_b", "awf_c", "awf_d", "awf_e")
+
+# Techniques that *measure* PE performance online instead of trusting a
+# priori weights (arXiv:1804.11115's adaptive rows).  ``awf`` is excluded
+# on purpose: in this repo it is the timestep-level variant whose weights
+# are supplied by an external policy (``weights="awf"``), while the
+# techniques below default to an online ``PerfModel``-driven policy.
+ADAPTIVE = ("af", "awf_b", "awf_c", "awf_d", "awf_e")
+
+#: (update boundary, include scheduling overhead) per AWF variant --
+#: shared by the weight policies (repro.dls.policies) and the DES.
+AWF_VARIANTS = {
+    "awf_b": ("batch", False),
+    "awf_c": ("chunk", False),
+    "awf_d": ("batch", True),
+    "awf_e": ("chunk", True),
+}
+
+# Techniques that consume a WeightPolicy at claim time (weight-scaled or
+# AF-stat-fed) -- the facade's "your weights will actually act" set.
+POLICY_DRIVEN = tuple(dict.fromkeys(WEIGHTED + ADAPTIVE))
+
+# The transformed-FAC2 family: one batch-halving closed form, optionally
+# weight-scaled.  AF bootstraps through this form until telemetry exists.
+FAC_FAMILY = ("fac2", "wf", "awf", "awf_b", "awf_c", "awf_d", "awf_e", "af")
+
+
+def technique_table() -> str:
+    """The markdown technique table embedded in README.md / DESIGN.md.
+
+    Generated (``scripts/gen_technique_table.py``) and drift-checked
+    (``tests/test_docs.py``) so the docs can never disagree with the code.
+    """
+    rows = ["| name | label | chunk rule | weighted | adaptive | source |",
+            "|------|-------|------------|----------|----------|--------|"]
+    for name, info in TECHNIQUE_INFO.items():
+        rows.append(
+            f"| `{name}` | {info['label']} | {info['summary']} "
+            f"| {'yes' if name in WEIGHTED else 'no'} "
+            f"| {'yes' if name in ADAPTIVE else 'no'} "
+            f"| {info['source']} |")
+    return "\n".join(rows)
+
+
+class AFStats(NamedTuple):
+    """Adaptive Factoring's per-claim telemetry snapshot (seconds/iteration).
+
+    ``mu``: the claiming PE's measured mean iteration time; ``D``/``T`` the
+    cluster aggregates ``sum_j sigma_j^2/mu_j`` and ``1/sum_j (1/mu_j)``
+    (Banicescu & Liu 2000).  Produced by ``weights.AdaptiveFactoringModel``.
+    """
+
+    mu: float
+    D: float
+    T: float
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,21 +180,48 @@ def tss_constants(N: int, P: int, min_chunk: int = 1):
 # ---------------------------------------------------------------------------
 
 def chunk_size_closed(spec: LoopSpec, i: int, pe: int = 0,
-                      weight: Optional[float] = None) -> int:
+                      weight: Optional[float] = None,
+                      af_stats: Optional[AFStats] = None,
+                      remaining: Optional[int] = None) -> int:
     """K'_i -- chunk size at scheduling step ``i`` (closed form, scalar).
 
     This is exactly what a PE computes in Step 2 of the paper's protocol,
     using only its private copy of ``i`` (and, for WF/AWF, its own weight).
-    ``weight`` overrides the spec's static weight for WF/AWF -- this is how
-    AWF's live, measured weights enter the closed form; it is ignored by
-    unweighted techniques.
+    ``weight`` overrides the spec's static weight for the WF family -- this
+    is how the AWF variants' live, measured weights enter the closed form;
+    it is ignored by unweighted techniques.  ``af_stats``/``remaining``
+    feed Adaptive Factoring; with either absent, AF bootstraps through the
+    FAC2 form (no telemetry yet, the standard AF cold start).
     """
-    k = _chunk_size_closed(spec, i, pe, weight)
+    k = _chunk_size_closed(spec, i, pe, weight, af_stats, remaining)
     return min(k, spec.max_chunk) if spec.max_chunk else k
 
 
+def af_chunk_size(stats: AFStats, remaining: int, min_chunk: int = 1) -> int:
+    """Adaptive Factoring chunk size (Banicescu & Liu 2000).
+
+    K_j = (D + 2*T*R - sqrt(D^2 + 4*D*T*R)) / (2*mu_j), with R the
+    remaining iterations.  With zero measured variance (D = 0) this
+    degenerates to T*R/mu_j -- each PE's speed-proportional share of 1/P
+    of the remainder; the variance term shrinks chunks when iteration
+    times are noisy.  Not a pure function of ``i``: the distributed
+    protocol feeds it the loop-pointer read it already performs for the
+    drain fast path (see ``OneSidedRuntime.claim``).
+    """
+    R = max(int(remaining), 0)
+    if R <= 0:
+        return min_chunk
+    mu = max(stats.mu, 1e-12)
+    D = max(stats.D, 0.0)
+    T = max(stats.T, 1e-12)
+    k = (D + 2.0 * T * R - math.sqrt(D * D + 4.0 * D * T * R)) / (2.0 * mu)
+    return max(int(math.ceil(k)), min_chunk)
+
+
 def _chunk_size_closed(spec: LoopSpec, i: int, pe: int = 0,
-                       weight: Optional[float] = None) -> int:
+                       weight: Optional[float] = None,
+                       af_stats: Optional[AFStats] = None,
+                       remaining: Optional[int] = None) -> int:
     t, N, P = spec.technique, spec.N, spec.P
     if t == "static":
         return int(math.ceil(N / P))
@@ -114,14 +234,18 @@ def _chunk_size_closed(spec: LoopSpec, i: int, pe: int = 0,
         # Eq. 2: K'_i = K_0 - i*C
         K0, Klast, S, C = tss_constants(N, P, spec.min_chunk)
         return max(K0 - i * C, Klast)
-    if t == "fac2":
-        # Eq. 3: K'_i = ceil((1/2)^(floor(i/P)+1) * N/P)
+    if t == "af" and af_stats is not None and remaining is not None:
+        return af_chunk_size(af_stats, remaining, spec.min_chunk)
+    if t == "fac2" or (t == "af"):
+        # Eq. 3: K'_i = ceil((1/2)^(floor(i/P)+1) * N/P).  AF without
+        # telemetry (cold start, or the offline planner) takes this form.
         b = i // P + 1
         return max(int(math.ceil(0.5 ** b * N / P)), spec.min_chunk)
-    if t in ("wf", "awf"):
+    if t in WEIGHTED:
         # WF inherits the transformed FAC2 function, scaled by the claimer's
-        # relative weight (paper Table 2 last row).  AWF is the same form
-        # with the live measured weight substituted for the static one.
+        # relative weight (paper Table 2 last row).  The AWF family is the
+        # same form with the live measured weight substituted for the
+        # static one (timestep/batch/chunk granularity per variant).
         w = spec.weight(pe) if weight is None else weight
         b = i // P + 1
         base = 0.5 ** b * N / P
@@ -161,7 +285,10 @@ def _chunk_sizes_closed(spec: LoopSpec, idx, xp=np, weights_per_step=None):
     if t == "tss":
         K0, Klast, S, C = tss_constants(N, P, spec.min_chunk)
         return xp.maximum(K0 - idx * C, Klast).astype(idx.dtype)
-    if t in ("fac2", "wf", "awf"):
+    if t in FAC_FAMILY:
+        # The batched planner is offline: the AWF variants take their
+        # statically-known weights (or ``weights_per_step``), AF its FAC2
+        # bootstrap -- there is no telemetry before execution.
         b = idx // P + 1
         base = (0.5 ** b.astype(fidx.dtype)) * (N / P)
         if t in WEIGHTED and weights_per_step is not None:
@@ -202,8 +329,11 @@ def _max_steps_bound(spec: LoopSpec) -> int:
     if t in ("tss", "tfss"):
         K0, Klast, S, C = tss_constants(N, P, spec.min_chunk)
         return S + N // max(Klast, 1) + 1
-    if t in ("fac2", "wf", "awf"):
-        # batch b assigns ~ half the remainder; <= P*log2(N) + tail of 1s
+    if t in FAC_FAMILY:
+        # batch b assigns ~ half the remainder; <= P*log2(N) + tail of 1s.
+        # Live AWF/AF weights can shrink chunks below the unweighted
+        # halving assumed here -- ``plan`` grows its bound until covered,
+        # and the runtimes loop until drained, so the bound stays safe.
         return P * (int(math.ceil(math.log2(max(N, 2)))) + 2) + P
     raise AssertionError(t)
 
@@ -293,7 +423,7 @@ def chunk_series_recurrence(
         elif t == "tss":
             k_tss = K0 if k_tss is None else max(k_tss - C, Klast)
             k = k_tss
-        elif t in ("fac2", "wf", "awf"):
+        elif t in FAC_FAMILY:
             if i % P == 0:  # new batch: half the remainder, split P ways
                 batch_base = max(int(math.ceil(R / (2.0 * P))), spec.min_chunk)
             k = batch_base
@@ -329,9 +459,22 @@ def plan(spec: LoopSpec, weights_per_step=None):
     sharder and by tests as the ground truth partition.
     """
     S_hi = max_steps_bound(spec)
-    idx = np.arange(S_hi, dtype=np.int64)
-    sizes = chunk_sizes_closed(spec, idx, np, weights_per_step).astype(np.int64)
-    csum = np.cumsum(sizes)
+    while True:
+        idx = np.arange(S_hi, dtype=np.int64)
+        sizes = chunk_sizes_closed(spec, idx, np, weights_per_step).astype(np.int64)
+        csum = np.cumsum(sizes)
+        if len(csum) and csum[-1] >= spec.N:
+            break
+        # Small supplied weights can shrink chunks below the unweighted
+        # halving the bound assumes; chunks are >= min_chunk >= 1, so
+        # doubling (capped by N steps) always terminates.
+        if weights_per_step is None or S_hi >= spec.N:
+            raise ValueError("weights_per_step too short to cover the loop")
+        S_hi = min(S_hi * 2, spec.N)
+        if len(weights_per_step) < S_hi:
+            weights_per_step = np.concatenate(
+                [np.asarray(weights_per_step, dtype=np.float64),
+                 np.ones(S_hi - len(weights_per_step))])
     # first index where cumulative >= N
     cut = int(np.searchsorted(csum, spec.N))
     sizes = sizes[: cut + 1].copy()

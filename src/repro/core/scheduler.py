@@ -69,19 +69,26 @@ class OneSidedRuntime:
         self._ki = f"loop{lid}/i"
         self._kl = f"loop{lid}/lp"
 
-    def claim(self, pe: int = 0, weight: Optional[float] = None) -> Optional[Claim]:
+    def claim(self, pe: int = 0, weight: Optional[float] = None,
+              af: Optional[cc.AFStats] = None) -> Optional[Claim]:
         """One scheduling step for PE ``pe``; None when the loop is exhausted.
 
-        ``weight`` overrides the spec's static weight for this claim (used by
-        AWF, whose weights evolve during execution).
+        ``weight`` overrides the spec's static weight for this claim (the
+        AWF family, whose weights evolve during execution).  ``af`` carries
+        Adaptive Factoring's measured ``AFStats``; its remaining-iterations
+        term reuses the loop-pointer read the drain fast path already pays
+        (a slightly stale R -- the honest distributed estimate; Step 3
+        still truncates exactly, so conservation is unaffected).
         """
         N = self.spec.N
         # Fast-path exit: if the loop pointer is already past N, don't burn
         # a step index.  (A stale read here is harmless -- Step 3 re-checks.)
-        if self.window.read(self._kl) >= N:
+        lp = self.window.read(self._kl)
+        if lp >= N:
             return None
         i = self.window.fetch_add(self._ki, 1)  # Step 1
-        k = cc.chunk_size_closed(self.spec, i, pe, weight=weight)  # Step 2 (local)
+        k = cc.chunk_size_closed(self.spec, i, pe, weight=weight,
+                                 af_stats=af, remaining=N - lp)  # Step 2 (local)
         start = self.window.fetch_add(self._kl, k)  # Step 3
         if start >= N:
             return None
@@ -176,6 +183,12 @@ class HierarchicalRuntime:
         self._bounds, self._n_pes = cc.node_blocks(spec.P, nodes)
         self._outer_spec = cc.hierarchical_outer_spec(spec, nodes)
         self._inner_specs: Dict[tuple, cc.LoopSpec] = {}
+        # Optional live node-weight source for weighted *outer* techniques:
+        # ``node -> weight`` (None = use the outer spec's aggregated static
+        # weights).  The session facade points this at the weight policy's
+        # telemetry aggregation (PerfModel.node_weights) so super-chunk
+        # claims track measured node speed -- DESIGN.md Sec. 8.
+        self.outer_weight_fn: Optional[Callable[[int], Optional[float]]] = None
 
     # -- PE -> node mapping -------------------------------------------------
     def node_of(self, pe: int) -> int:
@@ -208,18 +221,23 @@ class HierarchicalRuntime:
         return keys
 
     # -- claiming -----------------------------------------------------------
-    def claim(self, pe: int = 0, weight: Optional[float] = None) -> Optional[Claim]:
-        """One scheduling step for PE ``pe``; None once drained for its node."""
+    def claim(self, pe: int = 0, weight: Optional[float] = None,
+              af: Optional[cc.AFStats] = None) -> Optional[Claim]:
+        """One scheduling step for PE ``pe``; None once drained for its node.
+
+        ``weight``/``af`` act at the *inner* (within-node) level; weighted
+        outer techniques take live node weights from ``outer_weight_fn``.
+        """
         node = self.node_of(pe)
         local = self.window.local(node)
         e = local.read(self._nseq[node])
         while True:
-            got = self._claim_in_epoch(pe, node, local, e, weight)
+            got = self._claim_in_epoch(pe, node, local, e, weight, af)
             if got is not _RETRY:
                 return got
             e += 1
 
-    def _claim_in_epoch(self, pe, node, local, e, weight):
+    def _claim_in_epoch(self, pe, node, local, e, weight, af=None):
         k_ = self._epoch_keys(node, e)
         if local.read(k_[self._READY]) == 0:
             if local.fetch_add(k_[self._TOKEN], 1) == 0:
@@ -236,9 +254,11 @@ class HierarchicalRuntime:
         if size == 0:
             return None  # sentinel epoch: global pool drained, node done
         start = local.read(k_[self._START])
+        lp_seen = local.read(k_[self._LP])  # AF's remaining-in-epoch estimate
         i_l = local.fetch_add(k_[self._I], 1)
         k = cc.chunk_size_closed(self._inner_spec(node, size), i_l,
-                                 self._local_rank(pe, node), weight=weight)
+                                 self._local_rank(pe, node), weight=weight,
+                                 af_stats=af, remaining=size - lp_seen)
         off = local.fetch_add(k_[self._LP], k)
         if off < size:
             return Claim(step=i_l, start=start + off, size=min(k, size - off))
@@ -257,7 +277,9 @@ class HierarchicalRuntime:
         if G.read(self._gl) >= N:  # fast path: no step burn once drained
             return 0, 0
         i_g = G.fetch_add(self._gi, 1)
-        K = cc.chunk_size_closed(self._outer_spec, i_g, node)
+        w = self.outer_weight_fn(node) if self.outer_weight_fn is not None \
+            else None
+        K = cc.chunk_size_closed(self._outer_spec, i_g, node, weight=w)
         start = G.fetch_add(self._gl, K)
         if start >= N:
             return 0, 0
@@ -350,7 +372,8 @@ class TwoSidedRuntime:
         )
 
     # -- master-side recurrence (one claim), mirrors chunk_series_recurrence --
-    def claim(self, pe: int = 0, weight: Optional[float] = None) -> Optional[Claim]:
+    def claim(self, pe: int = 0, weight: Optional[float] = None,
+              af: Optional[cc.AFStats] = None) -> Optional[Claim]:
         import math
 
         spec = self.spec
@@ -370,13 +393,22 @@ class TwoSidedRuntime:
                     self._K0 if self._k_tss is None else max(self._k_tss - self._C, self._Klast)
                 )
                 k = self._k_tss
-            elif t in ("fac2", "wf", "awf"):
+            elif t in cc.FAC_FAMILY:
+                # batch bookkeeping advances on *every* claim of the family
+                # (an AF claim that lands on a batch boundary must still
+                # refresh the base, or a telemetry-less PE's next bootstrap
+                # claim would read a stale/None base)
                 if i % P == 0:
                     self._batch_base = max(int(math.ceil(R / (2.0 * P))), spec.min_chunk)
-                k = self._batch_base
-                if t in cc.WEIGHTED:
-                    w = spec.weight(pe) if weight is None else weight
-                    k = max(int(math.ceil(w * self._batch_base)), spec.min_chunk)
+                if t == "af" and af is not None:
+                    # the master holds the exact remainder; AF's closed form
+                    # consumes it directly (no stale-read estimate needed)
+                    k = cc.af_chunk_size(af, R, spec.min_chunk)
+                else:  # includes AF's telemetry-less bootstrap
+                    k = self._batch_base
+                    if t in cc.WEIGHTED:
+                        w = spec.weight(pe) if weight is None else weight
+                        k = max(int(math.ceil(w * self._batch_base)), spec.min_chunk)
             elif t == "tfss":
                 if i % P == 0:
                     first = self._K0 - i * self._C
@@ -435,9 +467,10 @@ class TwoSidedRuntime:
                     int(math.ceil(max(self._R, 0) / (2.0 * spec.P))), spec.min_chunk)
 
     # -- two-sided protocol --
-    def request(self, pe: int, weight: Optional[float] = None) -> "queue.Queue":
+    def request(self, pe: int, weight: Optional[float] = None,
+                af: Optional[cc.AFStats] = None) -> "queue.Queue":
         reply: "queue.Queue" = queue.Queue(maxsize=1)
-        self._req.put((pe, weight, reply))
+        self._req.put((pe, weight, af, reply))
         return reply
 
     def serve_pending(self, limit: Optional[int] = None) -> int:
@@ -450,8 +483,8 @@ class TwoSidedRuntime:
                 break
             if item is self._SHUTDOWN:
                 break
-            pe, weight, reply = item
-            reply.put(self.claim(pe, weight=weight))
+            pe, weight, af, reply = item
+            reply.put(self.claim(pe, weight=weight, af=af))
             served += 1
         return served
 
@@ -463,8 +496,8 @@ class TwoSidedRuntime:
             return False
         if item is self._SHUTDOWN:
             return False
-        pe, weight, reply = item
-        reply.put(self.claim(pe, weight=weight))
+        pe, weight, af, reply = item
+        reply.put(self.claim(pe, weight=weight, af=af))
         return True
 
 

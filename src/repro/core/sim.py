@@ -86,6 +86,16 @@ class SimConfig:
     o_rma_global: Optional[float] = None  # None -> o_rma
     o_rma_local: float = 1e-7
     o_issue_local: float = 1e-5  # CPU time to issue a *local* claim
+    # -- Adaptive techniques (af / awf_b..e) --
+    # Chunk timings feeding the online PerfModel are perturbed by
+    # multiplicative lognormal noise with this c.o.v. (timer granularity +
+    # OS jitter on the measured chunk), and become *visible* to claimers
+    # only o_adapt_lag seconds after chunk completion (the telemetry RMWs
+    # must traverse the window before another PE's read can see them).
+    # Calibration derivations: EXPERIMENTS.md "Adaptive-technique
+    # calibration".
+    o_meas_cov: float = 0.05
+    o_adapt_lag: float = 1e-3
 
     def __post_init__(self):
         self.speeds = np.asarray(self.speeds, dtype=np.float64)
@@ -121,6 +131,88 @@ class SimResult:
 
 
 # ---------------------------------------------------------------------------
+# Adaptive-technique telemetry (af / awf_b..e): the DES drives the *same*
+# weight models the runtime policies use (core/weights.py), feeding them
+# noise-perturbed, lag-delayed observations on the virtual clock -- so
+# simulated and real adaptation can never use different math.
+# ---------------------------------------------------------------------------
+
+
+def _make_adaptive_model(technique: str, P: int):
+    from .weights import AdaptiveFactoringModel, AdaptiveWeightModel
+
+    if technique == "af":
+        return AdaptiveFactoringModel(P)
+    update, overhead = cc.AWF_VARIANTS[technique]
+    return AdaptiveWeightModel(P, update=update, include_overhead=overhead)
+
+
+class _AdaptiveTelemetry:
+    """Noise + adaptation-lag front end over an adaptive weight model.
+
+    ``observe`` queues a completed chunk's measurement (compute time
+    perturbed by lognormal noise with c.o.v. ``o_meas_cov``); ``deliver``
+    feeds the model every observation that has become visible by ``now``
+    (completion + ``o_adapt_lag``) -- the DES analogue of telemetry RMWs
+    propagating through the window before claimers can read them.
+    """
+
+    def __init__(self, model, cov: float, lag: float, rng: random.Random):
+        self.model = model
+        self.lag = lag
+        self.rng = rng
+        self.sig = math.sqrt(math.log(1.0 + cov * cov)) if cov > 0 else 0.0
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+
+    def observe(self, pe: int, iters: int, exec_t: float, sched_t: float,
+                t_done: float) -> None:
+        if iters <= 0:
+            return
+        sec = exec_t
+        if self.sig:
+            sec *= self.rng.lognormvariate(-0.5 * self.sig * self.sig, self.sig)
+        heapq.heappush(self._heap,
+                       (t_done + self.lag, next(self._seq), pe, iters, sec,
+                        sched_t))
+
+    def deliver(self, now: float) -> None:
+        while self._heap and self._heap[0][0] <= now:
+            _, _, pe, iters, sec, sched = heapq.heappop(self._heap)
+            self.model.record(pe, iters, sec, sched)
+
+    # -- claim-time lookups -------------------------------------------------
+    def weight(self, pe: int) -> Optional[float]:
+        return self.model.weight(pe)
+
+    def af_stats(self, pe: int):
+        fn = getattr(self.model, "af_stats", None)
+        return fn(pe) if fn is not None else None
+
+    def node_weight(self, node: int, bounds) -> Optional[float]:
+        return self.model.node_weight(node, bounds)
+
+
+def _telemetry_for(cf: SimConfig, rng: random.Random,
+                   inner: Optional[str] = None,
+                   lag: Optional[float] = None) -> Optional[_AdaptiveTelemetry]:
+    """A telemetry front end if any scheduling level is adaptive, else None.
+
+    When both levels are adaptive the *inner* (per-PE claim) technique
+    picks the model -- claims are per-PE; the outer level only consumes the
+    node-aggregated weights, which every model exposes.  ``lag`` overrides
+    ``o_adapt_lag`` (the two-sided DES passes 0: telemetry is master-local,
+    no window traversal to wait for).
+    """
+    names = [t for t in (inner, cf.spec.technique) if t in cc.ADAPTIVE]
+    if not names:
+        return None
+    return _AdaptiveTelemetry(_make_adaptive_model(names[0], cf.spec.P),
+                              cf.o_meas_cov,
+                              cf.o_adapt_lag if lag is None else lag, rng)
+
+
+# ---------------------------------------------------------------------------
 # One_Sided DES
 # ---------------------------------------------------------------------------
 
@@ -130,6 +222,7 @@ def _simulate_one_sided(cf: SimConfig) -> SimResult:
     P = spec.P
     rng = random.Random(cf.seed)
     pref = np.concatenate([[0.0], np.cumsum(cf.costs)])  # prefix sums of cost
+    tele = _telemetry_for(cf, rng)
 
     # Window state (the two shared integers of the paper)
     glob_i = 0
@@ -184,7 +277,13 @@ def _simulate_one_sided(cf: SimConfig) -> SimResult:
             i_local = glob_i
             glob_i += 1
             # Step 2: local closed-form chunk calculation (overlaps other PEs)
-            k = cc.chunk_size_closed(spec, i_local, pe)
+            if tele is None:
+                k = cc.chunk_size_closed(spec, i_local, pe)
+            else:
+                tele.deliver(t)
+                k = cc.chunk_size_closed(
+                    spec, i_local, pe, weight=tele.weight(pe),
+                    af_stats=tele.af_stats(pe), remaining=N - glob_lp)
             t_ready = t + cf.o_claim_net + cf.t_calc / cf.speeds[pe]
             push(t_ready, "want_rmw2", pe, k)
         elif kind == "want_rmw2":
@@ -195,7 +294,8 @@ def _simulate_one_sided(cf: SimConfig) -> SimResult:
             start = glob_lp
             glob_lp += k
             t_got = t + cf.o_claim_net
-            claim_latencies.append(t_got - claim_started.pop(pe))
+            lat = t_got - claim_started.pop(pe)
+            claim_latencies.append(lat)
             if start >= N:
                 finish[pe] = t_got
                 done_pes += 1
@@ -204,6 +304,8 @@ def _simulate_one_sided(cf: SimConfig) -> SimResult:
             stop = min(start + k, N)
             iters[pe] += stop - start
             exec_t = (pref[stop] - pref[start]) / cf.speeds[pe]
+            if tele is not None:
+                tele.observe(pe, stop - start, exec_t, lat, t_got + exec_t)
             push(t_got + exec_t + cf.o_issue / cf.speeds[pe], "want_rmw1", pe)
         elif kind == "win_free":
             window_grant(t)
@@ -244,6 +346,7 @@ def _simulate_hierarchical(cf: SimConfig) -> SimResult:
     P, nodes = spec.P, cf.nodes
     rng = random.Random(cf.seed)
     pref = np.concatenate([[0.0], np.cumsum(cf.costs)])
+    tele = _telemetry_for(cf, rng, inner=cf.inner_technique)
 
     # Topology + level specs come from the same helpers HierarchicalRuntime
     # uses, so the simulated schedule cannot drift from the real one.
@@ -362,8 +465,15 @@ def _simulate_hierarchical(cf: SimConfig) -> SimResult:
             s = payload  # the super-chunk this PE claimed against
             i_l = s["i"]
             s["i"] += 1
-            k = cc.chunk_size_closed(
-                inner_spec(s["node"], s["size"]), i_l, pe - bounds[node])
+            if tele is None or cf.inner_technique not in cc.ADAPTIVE:
+                k = cc.chunk_size_closed(
+                    inner_spec(s["node"], s["size"]), i_l, pe - bounds[node])
+            else:
+                tele.deliver(t)
+                k = cc.chunk_size_closed(
+                    inner_spec(s["node"], s["size"]), i_l, pe - bounds[node],
+                    weight=tele.weight(pe), af_stats=tele.af_stats(pe),
+                    remaining=s["size"] - s["lp"])
             push(t + cf.t_calc / cf.speeds[pe], "want_l2", pe, (s, k))
         elif kind == "want_l2":
             l_waiters[node].append((pe, 2, payload))
@@ -378,12 +488,15 @@ def _simulate_hierarchical(cf: SimConfig) -> SimResult:
                     sc[node] = None
                 want_local(pe, t)
                 continue
-            claim_latencies.append(t - claim_started.pop(pe))
+            lat = t - claim_started.pop(pe)
+            claim_latencies.append(lat)
             n_claims += 1
             a = s["start"] + off
             b = s["start"] + min(off + k, s["size"])
             iters[pe] += b - a
             exec_t = (pref[b] - pref[a]) / cf.speeds[pe]
+            if tele is not None:
+                tele.observe(pe, b - a, exec_t, lat, t + exec_t)
             push(t + exec_t + cf.o_issue_local / cf.speeds[pe], "want_l1", pe)
         elif kind == "want_g1":
             claim_started.setdefault(pe, t)
@@ -392,7 +505,14 @@ def _simulate_hierarchical(cf: SimConfig) -> SimResult:
         elif kind == "g1_done":
             i_g = glob_i
             glob_i += 1
-            K = cc.chunk_size_closed(outer, i_g, node)
+            # Weighted outer techniques consume telemetry aggregated to node
+            # level (PerfModel.node_weights) -- an adaptive *outer* AF has
+            # no node-level (mu, sigma), so it rides its FAC2 bootstrap.
+            nw = None
+            if tele is not None and spec.technique in cc.WEIGHTED:
+                tele.deliver(t)
+                nw = tele.node_weight(node, bounds)
+            K = cc.chunk_size_closed(outer, i_g, node, weight=nw)
             push(t + cf.o_claim_net + cf.t_calc / cf.speeds[pe],
                  "want_g2", pe, K)
         elif kind == "want_g2":
@@ -445,6 +565,10 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
     m = cf.coordinator
     s_m = cf.speeds[m]
     pref = np.concatenate([[0.0], np.cumsum(cf.costs)])
+    # Adaptive techniques only: telemetry lives master-side (the master
+    # already serializes claims), so measurements apply at the next serve
+    # with noise but no extra visibility lag.
+    tele = _telemetry_for(cf, random.Random(cf.seed), lag=0.0)
 
     # Master-side recurrence state (Table 2)
     R = N
@@ -453,10 +577,12 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
     batch_base: Optional[int] = None
     K0, Klast, S, C = cc.tss_constants(N, P, spec.min_chunk)
 
-    def next_chunk(pe):
+    def next_chunk(pe, now=0.0):
         nonlocal R, i_step, k_tss, batch_base
         if R <= 0:
             return None
+        if tele is not None:
+            tele.deliver(now)
         t_, Pn = spec.technique, spec.P
         if t_ == "static":
             k = int(math.ceil(N / Pn))
@@ -467,12 +593,22 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
         elif t_ == "tss":
             k_tss = K0 if k_tss is None else max(k_tss - C, Klast)
             k = k_tss
-        elif t_ in ("fac2", "wf", "awf"):
+        elif t_ in cc.FAC_FAMILY:
+            # batch bookkeeping advances on every claim of the family, so a
+            # telemetry-less bootstrap claim never reads a stale/None base
             if i_step % Pn == 0:
                 batch_base = max(int(math.ceil(R / (2.0 * Pn))), spec.min_chunk)
-            k = batch_base
-            if t_ in cc.WEIGHTED:
-                k = max(int(math.ceil(spec.weight(pe) * batch_base)), spec.min_chunk)
+            stats = tele.af_stats(pe) if t_ == "af" and tele is not None \
+                else None
+            if stats is not None:
+                k = cc.af_chunk_size(stats, R, spec.min_chunk)
+            else:  # includes AF's telemetry-less bootstrap
+                k = batch_base
+                if t_ in cc.WEIGHTED:
+                    w = tele.weight(pe) if tele is not None else None
+                    if w is None:
+                        w = spec.weight(pe)
+                    k = max(int(math.ceil(w * batch_base)), spec.min_chunk)
         elif t_ == "tfss":
             if i_step % Pn == 0:
                 first = K0 - i_step * C
@@ -527,7 +663,7 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
             dt = cf.o_serve / s_m
             serve_time += dt
             master_busy = True
-            res = next_chunk(rank)
+            res = next_chunk(rank, now)
             push(now + dt, "serve_done", rank, res)
             return
         # 2) own work: burn one time quantum
@@ -538,7 +674,7 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
             push(now + dt, "master_slice_done", m, None)
             return
         if not master_done_own and now >= master_may_claim_at:
-            res = next_chunk(m)
+            res = next_chunk(m, now)
             if res is None:
                 master_done_own = True
                 finish[m] = max(finish[m], now)
@@ -547,7 +683,7 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
                 start, k = res
                 iters[m] += k
                 exec_t = (pref[start + k] - pref[start]) / s_m
-                master_chunk = [exec_t, k]
+                master_chunk = [exec_t, k, exec_t]
                 dt = cf.t_calc / s_m
                 master_busy = True
                 push(now + dt, "master_claimed", m, None)
@@ -577,7 +713,8 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
             push(t + cf.o_req_net / 2, "reply_arrive", pe, res)
             master_kick(t)
         elif kind == "reply_arrive":
-            claim_latencies.append(t - claim_started.pop(pe))
+            lat = t - claim_started.pop(pe)
+            claim_latencies.append(lat)
             if payload is None:
                 finish[pe] = t
                 workers_done += 1
@@ -587,6 +724,8 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
             stop = nonlocal_start + k
             iters[pe] += k
             exec_t = (pref[stop] - pref[nonlocal_start]) / cf.speeds[pe]
+            if tele is not None:
+                tele.observe(pe, k, exec_t, lat, t + exec_t)
             push(t + exec_t, "worker_done_chunk", pe)
         elif kind == "worker_done_chunk":
             claim_started[pe] = t
@@ -594,6 +733,8 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
         elif kind == "master_slice_done":
             master_busy = False
             if master_chunk[0] <= 1e-15:
+                if tele is not None:
+                    tele.observe(m, master_chunk[1], master_chunk[2], 0.0, t)
                 master_chunk = None
                 finish[m] = t
             master_kick(t)

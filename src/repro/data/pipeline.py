@@ -89,8 +89,10 @@ class DLSSampler:
 
     def _new_epoch_session(self):
         # namespace by epoch so monotonic KV windows work across epochs
-        # (the weight board only acts for wf/awf -- don't attach a no-op
-        # policy, and don't warn, for the unweighted techniques)
+        # (the weight board only acts for the weighted family -- don't
+        # attach a no-op policy, and don't warn, for unweighted techniques;
+        # adaptive techniques with no board auto-adopt their telemetry
+        # policy inside dls.loop)
         board = self.board if self.technique in dls.WEIGHTED else None
         self.session = dls.loop(
             self.n_samples, technique=self.technique, P=self.n_hosts,

@@ -10,26 +10,35 @@ One composable session API over the paper's machinery (see DESIGN.md):
     print(report.summary())  # steps, chunk sizes, per-PE busy, c.o.v.
 
 Layers behind the facade (all swappable):
-  Runtime      -- one_sided (two atomic fetch-adds, paper Sec. 3) or
-                  two_sided (master-worker baseline)
+  Runtime      -- one_sided (two atomic fetch-adds, paper Sec. 3),
+                  two_sided (master-worker baseline), hierarchical
   Window       -- thread | kvstore | sim | auto (repro.core.rma)
-  WeightPolicy -- uniform | static WF | adaptive AWF
+  WeightPolicy -- uniform | static WF | the adaptive family (AWF EMA,
+                  AWF-B/C/D/E, AF) over online PerfModel telemetry
+                  (DESIGN.md Sec. 8)
   Executor     -- serial | threads | sim
 
 ``repro.core``'s ``run_threaded_*`` helpers remain as deprecation shims
 over this package.
 """
 from repro.core.chunk_calculus import (  # noqa: F401  (re-exported surface)
+    ADAPTIVE,
     TECHNIQUES,
     WEIGHTED,
+    AFStats,
     LoopSpec,
+    technique_table,
 )
 from repro.core.rma import HierarchicalWindow  # noqa: F401
 from repro.core.scheduler import Claim, HierarchicalRuntime  # noqa: F401
+from repro.core.weights import PerfModel  # noqa: F401
 
 from .executors import EXECUTORS, execute  # noqa: F401
 from .policies import (  # noqa: F401
+    POLICY_NAMES,
+    AdaptiveFactoring,
     AdaptiveWeights,
+    AWFVariantWeights,
     CallableWeights,
     StaticWeights,
     UniformWeights,
@@ -41,6 +50,10 @@ from .runtime import RUNTIMES, Runtime, make_runtime  # noqa: F401
 from .session import DLSession, loop  # noqa: F401
 
 __all__ = [
+    "ADAPTIVE",
+    "AFStats",
+    "AWFVariantWeights",
+    "AdaptiveFactoring",
     "AdaptiveWeights",
     "CallableWeights",
     "Claim",
@@ -49,6 +62,8 @@ __all__ = [
     "HierarchicalRuntime",
     "HierarchicalWindow",
     "LoopSpec",
+    "POLICY_NAMES",
+    "PerfModel",
     "RUNTIMES",
     "Runtime",
     "SessionReport",
@@ -61,4 +76,5 @@ __all__ = [
     "loop",
     "make_runtime",
     "make_weight_policy",
+    "technique_table",
 ]

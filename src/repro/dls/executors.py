@@ -45,11 +45,21 @@ def execute(session, work_fn: Optional[WorkFn], executor: str = "threads",
     raise ValueError(f"unknown executor {executor!r}; pick from {EXECUTORS}")
 
 
-def _run_chunk(session, pe: int, c: Claim, work_fn: Optional[WorkFn]) -> None:
+def _run_chunk(session, pe: int, c: Claim, work_fn: Optional[WorkFn],
+               sched_seconds: float = 0.0) -> None:
     t0 = time.perf_counter()
     if work_fn is not None:
         work_fn(c.start, c.stop)
-    session.record(pe, c.size, time.perf_counter() - t0)
+    session.record(pe, c.size, time.perf_counter() - t0,
+                   sched_seconds=sched_seconds)
+
+
+def _timed_claim(session, pe: int):
+    """(claim, seconds spent claiming) -- the scheduling overhead that the
+    overhead-timing adaptive variants (AWF-D/E) fold into chunk timings."""
+    t0 = time.perf_counter()
+    c = session.claim(pe)
+    return c, time.perf_counter() - t0
 
 
 def _serial(session, work_fn: Optional[WorkFn]):
@@ -64,12 +74,12 @@ def _serial(session, work_fn: Optional[WorkFn]):
     pe = 0
     while n_done < P:
         if not done[pe]:
-            c = session.claim(pe)
+            c, sched = _timed_claim(session, pe)
             if c is None:
                 done[pe] = True
                 n_done += 1
             else:
-                _run_chunk(session, pe, c, work_fn)
+                _run_chunk(session, pe, c, work_fn, sched)
         pe = (pe + 1) % P
     return session.report("serial", wall_time=time.perf_counter() - t0)
 
@@ -86,10 +96,10 @@ def _threads_one_sided(session, work_fn: Optional[WorkFn],
 
     def worker(pe: int):
         while True:
-            c = session.claim(pe)
+            c, sched = _timed_claim(session, pe)
             if c is None:
                 return
-            _run_chunk(session, pe, c, work_fn)
+            _run_chunk(session, pe, c, work_fn, sched)
 
     threads = [threading.Thread(target=worker, args=(j,), name=f"dls-{j}")
                for j in range(n_threads)]
@@ -114,19 +124,23 @@ def _threads_two_sided(session, work_fn: Optional[WorkFn],
 
     def worker(pe: int):
         while True:
-            reply = rt.request(pe, weight=session.policy.weight(pe))
+            t0 = time.perf_counter()
+            af = session.policy.af_stats(pe) if session._wants_af else None
+            reply = rt.request(pe, weight=session.policy.weight(pe), af=af)
             c = reply.get()
+            sched = time.perf_counter() - t0
             if c is None:
                 return
             session.log_claim(pe, c)
-            _run_chunk(session, pe, c, work_fn)
+            _run_chunk(session, pe, c, work_fn, sched)
 
     def master():
         my_claim: Optional[Claim] = None
+        my_sched = 0.0
         while True:
             rt.serve_pending()
             if my_claim is None:
-                my_claim = session.claim(master_pe)
+                my_claim, my_sched = _timed_claim(session, master_pe)
                 if my_claim is None:
                     # loop exhausted: keep serving until workers drain
                     while not done.is_set():
@@ -135,7 +149,7 @@ def _threads_two_sided(session, work_fn: Optional[WorkFn],
                                 break
                     rt.serve_pending()
                     return
-            _run_chunk(session, master_pe, my_claim, work_fn)
+            _run_chunk(session, master_pe, my_claim, work_fn, my_sched)
             my_claim = None
 
     threads = [

@@ -37,6 +37,12 @@ class SessionReport:
     # ThreadWindow); flat sessions over counting windows report local=0.
     n_rmw_global: Optional[int] = None
     n_rmw_local: Optional[int] = None
+    # Adaptation trace (adaptive policies only, DESIGN.md Sec. 8): the
+    # policy's weight-update history -- for the AWF variants one entry per
+    # update boundary ({"update": ordinal, "weights": [per-PE]}), for AF
+    # one per recorded chunk ({"update", "pe", "mu"}).  None for static
+    # policies; capped at the policy's trace_limit.
+    adaptation: Optional[List[dict]] = None
 
     @property
     def claims(self) -> List[Claim]:
@@ -62,12 +68,28 @@ class SessionReport:
             return 0.0
         return coefficient_of_variation(self.busy_time)
 
+    @property
+    def n_weight_updates(self) -> int:
+        """How many times the weight policy adapted during this session."""
+        return len(self.adaptation) if self.adaptation else 0
+
+    def final_weights(self) -> Optional[List[float]]:
+        """The last adapted per-PE weights (AWF variants), if any."""
+        if not self.adaptation:
+            return None
+        for entry in reversed(self.adaptation):
+            if "weights" in entry:
+                return entry["weights"]
+        return None
+
     def summary(self) -> str:
         rmw = ""
         if self.n_rmw_global is not None:
             rmw = f" rmw_g={self.n_rmw_global}"
             if self.n_rmw_local is not None:
                 rmw += f" rmw_l={self.n_rmw_local}"
+        if self.adaptation:
+            rmw += f" adapt={self.n_weight_updates}"
         return (
             f"{self.technique} N={self.N} P={self.P} [{self.runtime}"
             f"{'/' + self.executor if self.executor else ''}] "

@@ -20,7 +20,7 @@ except ImportError:  # pragma: no cover
     def runtime_checkable(cls):  # type: ignore
         return cls
 
-from repro.core.chunk_calculus import LoopSpec
+from repro.core.chunk_calculus import AFStats, LoopSpec
 from repro.core.rma import HierarchicalWindow, Window, make_window
 from repro.core.scheduler import (
     Claim,
@@ -38,8 +38,14 @@ class Runtime(Protocol):
 
     spec: LoopSpec
 
-    def claim(self, pe: int = 0, weight: Optional[float] = None) -> Optional[Claim]:
-        """One scheduling step for ``pe``; None once the loop is exhausted."""
+    def claim(self, pe: int = 0, weight: Optional[float] = None,
+              af: Optional[AFStats] = None) -> Optional[Claim]:
+        """One scheduling step for ``pe``; None once the loop is exhausted.
+
+        ``weight`` is the AWF-family live weight; ``af`` is Adaptive
+        Factoring's measured ``AFStats`` snapshot (both optional -- static
+        techniques ignore them).
+        """
         ...
 
     def remaining_lower_bound(self) -> int:

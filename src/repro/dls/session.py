@@ -20,6 +20,7 @@ counters).  See DESIGN.md.
 """
 from __future__ import annotations
 
+import inspect
 import itertools
 import threading
 import warnings
@@ -27,7 +28,7 @@ from typing import Callable, Iterator, List, Optional
 
 import numpy as np
 
-from repro.core.chunk_calculus import WEIGHTED, LoopSpec
+from repro.core.chunk_calculus import ADAPTIVE, POLICY_DRIVEN, WEIGHTED, LoopSpec
 from repro.core.rma import HierarchicalWindow, SimWindow
 from repro.core.scheduler import Claim, HierarchicalRuntime, OneSidedRuntime
 
@@ -36,6 +37,29 @@ from .report import SessionReport
 from .runtime import Runtime, make_runtime
 
 _session_ids = itertools.count(1)
+
+
+def _record_call_style(policy: WeightPolicy) -> str:
+    """How to feed ``sched_seconds`` to ``policy.record``: "positional"
+    (a 4th positional parameter or *args), "keyword" (keyword-only
+    ``sched_seconds`` / **kwargs), or "legacy" (3-argument policies)."""
+    try:
+        sig = inspect.signature(policy.record)
+    except (TypeError, ValueError):  # pragma: no cover - builtins etc.
+        return "legacy"
+    params = list(sig.parameters.values())
+    kinds = inspect.Parameter
+    if any(p.kind is kinds.VAR_POSITIONAL for p in params):
+        return "positional"
+    positional = [p for p in params
+                  if p.kind in (kinds.POSITIONAL_ONLY,
+                                kinds.POSITIONAL_OR_KEYWORD)]
+    if len(positional) >= 4:
+        return "positional"
+    if any((p.kind is kinds.KEYWORD_ONLY and p.name == "sched_seconds")
+           or p.kind is kinds.VAR_KEYWORD for p in params):
+        return "keyword"
+    return "legacy"
 
 
 class DLSession:
@@ -62,6 +86,17 @@ class DLSession:
         self._claim_log: List[List[Claim]] = [[] for _ in range(spec.P)]
         self._busy: List[float] = [0.0] * spec.P
         self._grow_lock = threading.Lock()  # only for pe >= P growth
+        # Adaptive wiring (DESIGN.md Sec. 8): AF feeds measured AFStats to
+        # the claim-level technique (the inner one for hierarchical
+        # runtimes); weighted outer techniques pull telemetry aggregated to
+        # node level.  Legacy 3-argument ``record`` policies keep working.
+        claim_tech = (runtime.inner_technique
+                      if isinstance(runtime, HierarchicalRuntime)
+                      else spec.technique)
+        self._wants_af = (claim_tech == "af"
+                          and hasattr(self.policy, "af_stats"))
+        self._record_style = _record_call_style(self.policy)
+        self._wire_outer_weights()
         # RMW counts are reported as deltas against this baseline, so a
         # session on a shared (or reused) window reports only its own loop.
         self._rmw_base = self._rmw_snapshot()
@@ -71,6 +106,16 @@ class DLSession:
         if not record_metrics and isinstance(self.policy, UniformWeights):
             self.claim = self.runtime.claim  # type: ignore[method-assign]
 
+    def _wire_outer_weights(self) -> None:
+        """Point a hierarchical runtime's super-chunk claims at the policy's
+        node-aggregated telemetry (no-op for static/uniform policies)."""
+        if (isinstance(self.runtime, HierarchicalRuntime)
+                and self.spec.technique in WEIGHTED
+                and hasattr(self.policy, "node_weight")):
+            policy, bounds = self.policy, self.runtime._bounds
+            self.runtime.outer_weight_fn = (
+                lambda node: policy.node_weight(node, bounds))
+
     # ------------------------------------------------------------------
     # claiming
     # ------------------------------------------------------------------
@@ -78,10 +123,16 @@ class DLSession:
         """One scheduling step for PE ``pe``; None once the loop is drained.
 
         ``weight`` overrides the policy's weight for this single claim.
+        AF sessions additionally hand the policy's measured ``AFStats`` to
+        the runtime (None until telemetry exists -- the FAC2 bootstrap).
         """
         if weight is None:
             weight = self.policy.weight(pe)
-        c = self.runtime.claim(pe, weight=weight)
+        if self._wants_af:
+            c = self.runtime.claim(pe, weight=weight,
+                                   af=self.policy.af_stats(pe))
+        else:
+            c = self.runtime.claim(pe, weight=weight)
         if c is not None and self.record_metrics:
             self._ensure_pe(pe)
             self._claim_log[pe].append(c)
@@ -101,12 +152,30 @@ class DLSession:
             self._ensure_pe(pe)
             self._claim_log[pe].append(c)
 
-    def record(self, pe: int, iters: int, seconds: float) -> None:
-        """Feed back observed execution: AWF weights + busy-time metrics."""
-        self.policy.record(pe, iters, seconds)
+    def record(self, pe: int, iters: int, seconds: float,
+               sched_seconds: float = 0.0) -> None:
+        """Feed back observed execution: adaptive weights + busy metrics.
+
+        ``sched_seconds`` is the scheduling overhead paid to obtain the
+        chunk (claim latency) -- consumed by the overhead-timing AWF
+        variants (D/E); executors measure and pass it automatically.
+        """
+        if self._record_style == "positional":
+            self.policy.record(pe, iters, seconds, sched_seconds)
+        elif self._record_style == "keyword":
+            self.policy.record(pe, iters, seconds, sched_seconds=sched_seconds)
+        else:  # legacy 3-argument policies
+            self.policy.record(pe, iters, seconds)
         if self.record_metrics:
             self._ensure_pe(pe)
             self._busy[pe] += seconds
+
+    def advance_timestep(self) -> None:
+        """Signal a timestep boundary to timestep-granular adaptive policies
+        (no-op when the policy has no ``advance``)."""
+        fn = getattr(self.policy, "advance", None)
+        if fn is not None:
+            fn()
 
     # ------------------------------------------------------------------
     # drain contract
@@ -159,7 +228,13 @@ class DLSession:
             wall_time=wall_time,
             n_rmw_global=rmw_g,
             n_rmw_local=rmw_l,
+            adaptation=self._adaptation_trace(),
         )
+
+    def _adaptation_trace(self) -> Optional[List[dict]]:
+        """The policy's weight-update history (adaptive policies only)."""
+        trace = getattr(self.policy, "trace", None)
+        return list(trace) if trace is not None else None
 
     def _rmw_snapshot(self):
         """Window RMW totals (global, local), or None if it doesn't count.
@@ -204,6 +279,7 @@ class DLSession:
             self.runtime.restore({"i": 0, "lp": 0})
         self._claim_log = [[] for _ in range(len(self._claim_log))]
         self._busy = [0.0] * len(self._busy)
+        self._wire_outer_weights()  # fresh runtime objects need re-pointing
         self._rmw_base = self._rmw_snapshot()  # metrics restart at zero
         if not self.record_metrics and isinstance(self.policy, UniformWeights):
             self.claim = self.runtime.claim  # type: ignore[method-assign]
@@ -260,8 +336,11 @@ def loop(
         object | None (thread).  Ignored by two-sided runtimes; for
         hierarchical runtimes this is the *global* level (or a ready
         ``HierarchicalWindow``), node-local levels stay in-process.
-    weights: None/"uniform" | "awf" | a float sequence (static WF; also
-        stored on the spec) | a ``WeightBoard`` | a ``WeightPolicy``.
+    weights: None/"uniform" | an adaptive policy name ("awf", "af",
+        "awf_b".."awf_e") | a float sequence (static WF; also stored on
+        the spec) | a ``WeightBoard`` | a ``WeightPolicy``.  Adaptive
+        *techniques* left at ``weights=None`` auto-adopt their matching
+        telemetry policy (fresh in-process ``PerfModel``).
     loop_id: explicit counter namespace (defaults to a fresh id) -- pass a
         stable value to share one logical loop across host processes.
     record_metrics: disable to make ``claim`` a zero-overhead passthrough.
@@ -278,13 +357,28 @@ def loop(
                     min_chunk=min_chunk, max_chunk=max_chunk)
     rt = make_runtime(spec, runtime=runtime, window=window, loop_id=loop_id,
                       nodes=nodes, inner_technique=inner_technique)
+    # Adaptive techniques measure PE performance online: with no explicit
+    # policy they auto-adopt their own (technique-named) telemetry policy.
+    # The claim-level technique decides (inner for hierarchical runtimes,
+    # the outer falls back to node-aggregated telemetry either way).
+    claim_tech = (inner_technique or "ss") if runtime == "hierarchical" \
+        else technique
+    if weights is None:
+        for t in (claim_tech, technique):
+            if t in ADAPTIVE:
+                weights = t
+                break
     policy = make_weight_policy(weights, P)
-    weighted = technique in WEIGHTED or (
-        runtime == "hierarchical" and (inner_technique or "ss") in WEIGHTED)
+    # ``POLICY_DRIVEN`` (chunk_calculus) is the single source of truth for
+    # which techniques consume a weight policy -- this warning, the policy
+    # name registry, and the docs tables all derive from it.
+    weighted = technique in POLICY_DRIVEN or (
+        runtime == "hierarchical" and (inner_technique or "ss") in POLICY_DRIVEN)
     if weights is not None and not weighted \
             and not isinstance(policy, UniformWeights):
         warnings.warn(
-            f"technique {technique!r} ignores weights (only {WEIGHTED} use "
-            f"them); the supplied weight policy will have no effect",
+            f"technique {technique!r} ignores weights (only techniques in "
+            f"{POLICY_DRIVEN} consume a weight policy); the supplied policy "
+            f"will have no effect",
             stacklevel=2)
     return DLSession(spec, rt, weights=policy, record_metrics=record_metrics)

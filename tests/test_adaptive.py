@@ -1,0 +1,383 @@
+"""Online PE telemetry + the adaptive technique family (DESIGN.md Sec. 8).
+
+Covers the measurement plane (PerfModel / WapTracker / the adaptation
+models), the AF closed form, the facade wiring (auto-policies, adaptation
+trace, AF stats through every runtime), and the acceptance properties:
+adaptive techniques produce schedules *distinct* from their static parents
+once telemetry exists, while staying conservation-clean.
+"""
+import numpy as np
+import pytest
+
+from repro import dls
+from repro.core import chunk_calculus as cc
+from repro.core.rma import ThreadWindow
+from repro.core.weights import (
+    AdaptiveFactoringModel,
+    AdaptiveWeightModel,
+    PerfModel,
+    WapTracker,
+)
+
+# ---------------------------------------------------------------------------
+# PerfModel: window-backed telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_perfmodel_rates_and_mu():
+    m = PerfModel(3)
+    m.record(0, 100, 0.1)          # 1000 it/s
+    m.record(1, 100, 0.2)          # 500 it/s
+    snap = m.snapshot()
+    assert snap.iters[0] == 100 and snap.n[1] == 1 and snap.iters[2] == 0
+    mu = m.mu(snap)
+    assert mu[0] == pytest.approx(1e-3, rel=1e-3)
+    assert mu[1] == pytest.approx(2e-3, rel=1e-3)
+    assert np.isnan(mu[2])
+    rates = m.rates(snap)
+    assert rates[0] == pytest.approx(1000, rel=1e-3)
+
+
+def test_perfmodel_sigma_needs_two_chunks_and_is_nonnegative():
+    m = PerfModel(1)
+    m.record(0, 10, 0.010)
+    assert m.sigma2()[0] == 0.0  # one chunk: no spread yet
+    m.record(0, 10, 0.030)  # means 1 ms vs 3 ms per iter
+    s2 = m.sigma2()[0]
+    assert s2 == pytest.approx(1e-6, rel=1e-2)  # var of {1ms, 3ms} = 1 ms^2
+
+
+def test_perfmodel_survives_second_scale_iteration_times():
+    """Regression: ns^2 sums of second-scale chunk means exceed int64;
+    snapshot()/sigma2() must not overflow."""
+    m = PerfModel(1)
+    for _ in range(12):
+        m.record(0, 10, 10.0)  # 1 s/iteration
+    snap = m.snapshot()
+    assert snap.n[0] == 12
+    assert m.sigma2(snap)[0] == 0.0  # constant means: no spread
+    assert m.mu(snap)[0] == pytest.approx(1.0, rel=1e-6)
+
+
+def test_perfmodel_shared_window_aggregates_across_instances():
+    """Two PerfModels over one window = one telemetry plane (multi-session
+    sharing, the KV-store deployment shape)."""
+    w = ThreadWindow()
+    a, b = PerfModel(2, window=w), PerfModel(2, window=w)
+    a.record(0, 50, 0.05)
+    b.record(0, 50, 0.05)
+    assert a.snapshot().iters[0] == 100
+    assert b.snapshot().n[0] == 2
+
+
+def test_perfmodel_node_weights_aggregate_rates():
+    m = PerfModel(4)
+    for pe, sec in ((0, 0.1), (1, 0.1), (2, 0.4), (3, 0.4)):
+        m.record(pe, 100, sec)  # node 0 is 4x faster
+    nw = m.node_weights([0, 2, 4])
+    assert nw is not None and nw.sum() == pytest.approx(2.0)
+    assert nw[0] == pytest.approx(1.6) and nw[1] == pytest.approx(0.4)
+    assert PerfModel(4).node_weights([0, 2, 4]) is None  # blind -> None
+
+
+# ---------------------------------------------------------------------------
+# WapTracker + AdaptiveWeightModel (AWF-B/C/D/E)
+# ---------------------------------------------------------------------------
+
+
+def test_wap_tracker_normalizes_and_carries_forward():
+    t = WapTracker(2)
+    w = t.add(np.array([1e-3, 2e-3]))
+    assert w.sum() == pytest.approx(2.0)
+    assert w[0] > w[1]  # faster PE weighs more
+    w2 = t.add(np.array([1e-3, np.nan]))  # PE 1 silent: carries 2e-3
+    assert w2[0] > w2[1] and w2.sum() == pytest.approx(2.0)
+
+
+def test_wap_tracker_weights_recent_intervals_more():
+    t = WapTracker(2)
+    t.add(np.array([1e-3, 1e-3]))        # s=1: equal
+    w = t.add(np.array([1e-3, 4e-3]))    # s=2: PE1 got slow, weighted 2x
+    # wap_1 = (1*1 + 2*4)/3 = 3 ms vs plain mean 2.5 ms: recency bites
+    assert w[0] / w[1] == pytest.approx(3.0, rel=1e-6)
+
+
+def test_awf_batch_vs_chunk_update_granularity():
+    batch = AdaptiveWeightModel(4, update="batch")
+    chunk = AdaptiveWeightModel(4, update="chunk")
+    for j in range(3):  # 3 records < P=4
+        batch.record(j, 10, 0.01)
+        chunk.record(j, 10, 0.01)
+    assert batch.weight(0) is None and batch.n_updates == 0
+    assert chunk.weight(0) is not None and chunk.n_updates == 3
+    batch.record(3, 10, 0.01)  # 4th record closes the batch
+    assert batch.n_updates == 1 and batch.weight(0) is not None
+
+
+def test_awf_overhead_variants_see_sched_seconds():
+    plain = AdaptiveWeightModel(2, update="chunk", include_overhead=False)
+    overhead = AdaptiveWeightModel(2, update="chunk", include_overhead=True)
+    for m in (plain, overhead):
+        m.record(0, 10, 0.010, sched_seconds=0.0)
+        m.record(1, 10, 0.010, sched_seconds=0.010)  # PE1 pays 2x in sched
+    assert plain.weight(0) == pytest.approx(plain.weight(1))
+    assert overhead.weight(0) > overhead.weight(1)  # D/E punish overhead
+
+
+def test_awf_model_traces_updates():
+    m = AdaptiveWeightModel(2, update="chunk")
+    m.record(0, 10, 0.01)
+    m.record(1, 10, 0.02)
+    assert len(m.trace) == 2
+    assert m.trace[-1]["update"] == 2
+    assert len(m.trace[-1]["weights"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# AF: closed form + model
+# ---------------------------------------------------------------------------
+
+
+def test_af_chunk_zero_variance_is_speed_proportional_share():
+    # D=0: K = T*R/mu -- each PE's speed share of 1/P of the remainder
+    mu = np.array([1e-3, 1e-3, 1e-3, 2e-3])
+    T = 1.0 / np.sum(1.0 / mu)
+    R = 7000
+    fast = cc.af_chunk_size(cc.AFStats(mu=1e-3, D=0.0, T=T), R)
+    slow = cc.af_chunk_size(cc.AFStats(mu=2e-3, D=0.0, T=T), R)
+    assert fast == 2 * slow
+    assert fast == pytest.approx(T * R / 1e-3, abs=1)
+
+
+def test_af_variance_shrinks_chunks():
+    T = 2.5e-4
+    calm = cc.af_chunk_size(cc.AFStats(mu=1e-3, D=0.0, T=T), 10_000)
+    noisy = cc.af_chunk_size(cc.AFStats(mu=1e-3, D=1e-1, T=T), 10_000)
+    assert noisy < calm
+
+
+def test_af_model_bootstraps_then_measures():
+    m = AdaptiveFactoringModel(2)
+    assert m.af_stats(0) is None  # no telemetry: closed form bootstraps
+    m.record(0, 100, 0.1)
+    st = m.af_stats(0)
+    assert st is not None
+    assert st.mu == pytest.approx(1e-3, rel=1e-3)
+    assert m.af_stats(1) is None  # PE1 itself still unmeasured
+    assert st.T > 0
+
+
+# ---------------------------------------------------------------------------
+# Facade wiring
+# ---------------------------------------------------------------------------
+
+
+def test_loop_auto_adopts_adaptive_policies():
+    for tech, cls in [("af", dls.AdaptiveFactoring),
+                      ("awf_b", dls.AWFVariantWeights),
+                      ("awf_e", dls.AWFVariantWeights)]:
+        s = dls.loop(1000, technique=tech, P=4)
+        assert isinstance(s.policy, cls), tech
+    # non-adaptive techniques keep the uniform default
+    assert isinstance(dls.loop(1000, technique="fac2", P=4).policy,
+                      dls.UniformWeights)
+
+
+def test_make_weight_policy_unknown_name_lists_adaptive_set():
+    with pytest.raises(ValueError, match="awf_e"):
+        dls.make_weight_policy("nope", 4)
+
+
+def test_loop_accepts_policy_name_matching_every_adaptive_technique():
+    for name in dls.ADAPTIVE:
+        s = dls.loop(500, technique=name, P=3, weights=name)
+        assert not isinstance(s.policy, dls.UniformWeights)
+
+
+def _virtual_drain(session, speeds, cost=1e-3):
+    """Round-robin drain recording synthetic per-PE timings (deterministic
+    telemetry without wall-clock noise)."""
+    P = len(speeds)
+    done = [False] * P
+    n_done = 0
+    pe = 0
+    claims = []
+    while n_done < P:
+        if not done[pe]:
+            c = session.claim(pe)
+            if c is None:
+                done[pe] = True
+                n_done += 1
+            else:
+                claims.append((pe, c))
+                session.record(pe, c.size, c.size * cost / speeds[pe])
+        pe = (pe + 1) % P
+    return claims
+
+
+@pytest.mark.parametrize("runtime", ["one_sided", "two_sided"])
+@pytest.mark.parametrize("tech", dls.ADAPTIVE)
+def test_adaptive_with_live_telemetry_conserves(tech, runtime):
+    N, P = 3_000, 4
+    speeds = [1.0, 1.0, 1.0, 0.5]
+    session = dls.loop(N, technique=tech, P=P, runtime=runtime)
+    claims = [c for _, c in _virtual_drain(session, speeds)]
+    ivals = sorted((c.start, c.stop) for c in claims)
+    assert ivals[0][0] == 0 and ivals[-1][1] == N
+    assert all(b0 == a1 for (_, b0), (a1, _) in zip(ivals, ivals[1:]))
+    assert sum(c.size for c in claims) == N
+
+
+@pytest.mark.parametrize("tech", dls.ADAPTIVE)
+def test_adaptive_schedule_differs_from_static_parent(tech):
+    """fac2 -> af / awf -> awf_b..e: measured heterogeneity must change
+    the chunk series (the whole point of adapting)."""
+    N, P = 3_000, 4
+    speeds = [1.0, 1.0, 1.0, 0.25]
+    parent = "fac2" if tech == "af" else "awf"
+    sizes = {}
+    for t in (tech, parent):
+        session = dls.loop(N, technique=t, P=P)
+        sizes[t] = [(pe, c.size) for pe, c in _virtual_drain(session, speeds)]
+    assert sizes[tech] != sizes[parent], tech
+
+
+def test_adaptive_report_carries_adaptation_trace():
+    session = dls.loop(2_000, technique="awf_c", P=4)
+    _virtual_drain(session, [1.0, 1.0, 0.5, 0.5])
+    report = session.report()
+    assert report.n_weight_updates > 0
+    fw = report.final_weights()
+    assert fw is not None and len(fw) == 4
+    # the measured-slow PEs ended with smaller weights
+    assert fw[0] > fw[3]
+    assert "adapt=" in report.summary()
+
+
+def test_af_report_traces_mu_observations():
+    session = dls.loop(2_000, technique="af", P=4)
+    _virtual_drain(session, [1.0, 1.0, 1.0, 1.0])
+    report = session.report()
+    assert report.n_weight_updates > 0
+    assert "mu" in report.adaptation[0]
+
+
+def test_static_policy_report_has_no_adaptation():
+    session = dls.loop(500, technique="fac2", P=2)
+    _virtual_drain(session, [1.0, 1.0])
+    assert session.report().adaptation is None
+
+
+def test_legacy_three_arg_record_policy_still_works():
+    class Legacy:
+        def __init__(self):
+            self.calls = []
+
+        def weight(self, pe):
+            return 1.0
+
+        def record(self, pe, iters, seconds):  # no sched_seconds
+            self.calls.append((pe, iters))
+
+    pol = Legacy()
+    session = dls.loop(500, technique="wf", P=2, weights=pol)
+    session.execute(lambda a, b: None, executor="serial")
+    assert pol.calls and sum(i for _, i in pol.calls) == 500
+
+
+def test_keyword_only_sched_seconds_policy_works():
+    """Regression: a keyword-only ``sched_seconds`` (or **kwargs) policy
+    must receive the overhead by keyword, not a 5th positional arg."""
+    seen = {"sched": 0, "iters": 0}
+
+    class KwOnly:
+        def weight(self, pe):
+            return 1.0
+
+        def record(self, pe, iters, seconds, *, sched_seconds=0.0):
+            seen["iters"] += iters
+            seen["sched"] += 1 if sched_seconds >= 0 else 0
+
+    session = dls.loop(400, technique="wf", P=2, weights=KwOnly())
+    session.execute(lambda a, b: None, executor="serial")
+    assert seen["iters"] == 400 and seen["sched"] > 0
+
+
+def test_two_sided_af_batch_boundary_after_stats_claim():
+    """Regression: an AF claim landing on a batch boundary must still
+    refresh the master's batch base for telemetry-less bootstrap PEs."""
+    from repro.core.scheduler import TwoSidedRuntime
+
+    rt = TwoSidedRuntime(cc.LoopSpec("af", N=1_000, P=4))
+    st = cc.AFStats(mu=1e-3, D=0.0, T=2.5e-4)
+    a = rt.claim(0, af=st)  # i=0: AF stats claim on the boundary
+    b = rt.claim(1)  # bootstrap PE: must not see a None batch base
+    assert a is not None and b is not None
+    assert a.stop == b.start
+
+
+def test_executor_threads_drains_adaptive(tech="awf_d"):
+    N = 2_000
+    hits = np.zeros(N, np.int32)
+    import threading
+    lock = threading.Lock()
+
+    def work(a, b):
+        with lock:
+            hits[a:b] += 1
+
+    report = dls.loop(N, technique=tech, P=4).execute(work, executor="threads")
+    assert (hits == 1).all()
+    assert report.n_weight_updates > 0
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical: per-level aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_outer_weights_wired_from_telemetry():
+    session = dls.loop(4_000, technique="awf_b", P=8,
+                       runtime="hierarchical", nodes=2,
+                       inner_technique="awf_b")
+    assert session.runtime.outer_weight_fn is not None
+    claims = [c for _, c in _virtual_drain(
+        session, [1.0] * 4 + [0.25] * 4)]
+    assert sum(c.size for c in claims) == 4_000
+
+
+def test_hierarchical_inner_af_conserves():
+    session = dls.loop(3_000, technique="gss", P=6,
+                       runtime="hierarchical", nodes=2, inner_technique="af")
+    assert session._wants_af  # AF stats flow to the inner level
+    claims = [c for _, c in _virtual_drain(session, [1.0] * 6)]
+    assert sum(c.size for c in claims) == 3_000
+
+
+def test_hierarchical_static_outer_not_wired():
+    session = dls.loop(1_000, technique="gss", P=4,
+                       runtime="hierarchical", nodes=2)
+    assert session.runtime.outer_weight_fn is None
+
+
+# ---------------------------------------------------------------------------
+# Planner / recurrence stay total for the new roster
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tech", dls.ADAPTIVE)
+def test_plan_and_recurrence_bootstrap_partition(tech):
+    spec = cc.LoopSpec(tech, N=4_321, P=7)
+    sizes, _ = cc.plan(spec)
+    assert sizes.sum() == 4_321
+    assert sum(cc.chunk_series_recurrence(spec)) == 4_321
+
+
+def test_plan_grows_bound_for_tiny_weights():
+    """Live weights can shrink chunks below the unweighted halving the
+    steps bound assumes; plan() must extend, not truncate."""
+    spec = cc.LoopSpec("awf_b", N=2_000, P=4)
+    S = cc.max_steps_bound(spec)
+    sizes, _ = cc.plan(spec, weights_per_step=np.full(S, 0.05))
+    assert sizes.sum() == 2_000
+    assert (sizes > 0).all()

@@ -1,0 +1,85 @@
+"""Docs-consistency harness (CI's docs job).
+
+Two guarantees:
+
+  * the README quickstart actually runs: every fenced python block
+    containing doctest prompts is executed via doctest;
+  * the technique tables embedded in README.md and DESIGN.md (between
+    ``<!-- technique-table-start/end -->`` markers) are byte-identical to
+    ``chunk_calculus.technique_table()`` -- the roster's single source of
+    truth -- so docs can never drift from the code
+    (regenerate with ``scripts/gen_technique_table.py``).
+"""
+import doctest
+import pathlib
+import re
+
+import pytest
+
+from repro.core.chunk_calculus import (
+    ADAPTIVE,
+    POLICY_DRIVEN,
+    TECHNIQUES,
+    WEIGHTED,
+    technique_table,
+)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+TABLE_RE = re.compile(
+    r"<!-- technique-table-start -->\n(.*?)\n<!-- technique-table-end -->",
+    re.S)
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def _read(name: str) -> str:
+    return (ROOT / name).read_text()
+
+
+# ---------------------------------------------------------------------------
+# README quickstart snippet
+# ---------------------------------------------------------------------------
+
+
+def test_readme_quickstart_doctests_pass():
+    blocks = [b for b in FENCE_RE.findall(_read("README.md")) if ">>>" in b]
+    assert blocks, "README has no doctest-able quickstart block"
+    parser = doctest.DocTestParser()
+    runner = doctest.DocTestRunner(optionflags=doctest.ELLIPSIS)
+    for i, block in enumerate(blocks):
+        test = parser.get_doctest(block, {}, f"README-block-{i}", "README.md",
+                                  0)
+        runner.run(test)
+    assert runner.failures == 0, (
+        f"{runner.failures} README doctest failure(s) -- run the quickstart "
+        "block and update README.md")
+
+
+# ---------------------------------------------------------------------------
+# Technique tables: generated, never hand-drifted
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("doc", ["README.md", "DESIGN.md"])
+def test_technique_table_matches_code(doc):
+    m = TABLE_RE.search(_read(doc))
+    assert m, f"{doc} lost its technique-table markers"
+    assert m.group(1).strip() == technique_table().strip(), (
+        f"{doc} technique table drifted from chunk_calculus.TECHNIQUE_INFO; "
+        "regenerate with: PYTHONPATH=src python scripts/gen_technique_table.py")
+
+
+def test_roster_sets_are_consistent():
+    """The derived sets the facade / docs rely on stay within the roster."""
+    assert set(WEIGHTED) <= set(TECHNIQUES)
+    assert set(ADAPTIVE) <= set(TECHNIQUES)
+    assert set(POLICY_DRIVEN) == set(WEIGHTED) | set(ADAPTIVE)
+    # every technique row appears exactly once in the generated table
+    table = technique_table()
+    for name in TECHNIQUES:
+        assert table.count(f"| `{name}` |") == 1
+
+
+def test_readme_mentions_all_top_level_docs():
+    readme = _read("README.md")
+    for doc in ("DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md", "PAPERS.md"):
+        assert doc in readme, f"README architecture map lost its {doc} link"

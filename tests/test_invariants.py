@@ -106,13 +106,16 @@ def session_for(case, runtime, window=None):
 def make_case(rng, max_n):
     P = rng.randint(1, 12)
     return dict(
+        # dls.TECHNIQUES includes the adaptive family (af, awf_b..e): those
+        # run their telemetry-less bootstrap here -- the live-telemetry
+        # conservation path is covered by tests/test_adaptive.py.
         technique=rng.choice(dls.TECHNIQUES),
         N=rng.randint(1, max_n),
         P=P,
         min_chunk=rng.choice([1, 1, 1, 2, 7]),
         max_chunk=rng.choice([None, None, None, 64]),
         nodes=rng.randint(1, P),
-        inner=rng.choice(["ss", "gss", "fac2", "tss"]),
+        inner=rng.choice(["ss", "gss", "fac2", "tss", "af", "awf_c"]),
     )
 
 
@@ -127,6 +130,14 @@ CASES = [make_case(_rng, 4_000) for _ in range(24)] + [
          nodes=3, inner="tss"),
     dict(technique="ss", N=500, P=6, min_chunk=2, max_chunk=None,
          nodes=2, inner="fac2"),
+    # adaptive corners: AF at both levels; an overhead-timing AWF variant
+    # with capped chunks; a degenerate single-PE AF
+    dict(technique="af", N=777, P=5, min_chunk=1, max_chunk=None,
+         nodes=2, inner="af"),
+    dict(technique="awf_e", N=1234, P=7, min_chunk=2, max_chunk=32,
+         nodes=3, inner="awf_c"),
+    dict(technique="af", N=1, P=1, min_chunk=1, max_chunk=None,
+         nodes=1, inner="awf_d"),
 ]
 
 
@@ -205,7 +216,8 @@ if HAVE_HYPOTHESIS:
             min_chunk=draw(st.sampled_from([1, 1, 1, 2, 7])),
             max_chunk=draw(st.sampled_from([None, None, None, 64])),
             nodes=draw(st.integers(min_value=1, max_value=P)),
-            inner=draw(st.sampled_from(["ss", "gss", "fac2", "tss"])),
+            inner=draw(st.sampled_from(
+                ["ss", "gss", "fac2", "tss", "af", "awf_c"])),
         )
 
     @pytest.mark.parametrize("runtime", RUNTIMES)

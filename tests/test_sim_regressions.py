@@ -95,3 +95,61 @@ def test_hierarchical_local_claims_cheaper_than_flat_global(costs):
     hier = run("gss", "hierarchical", "knl", costs, nodes=8,
                inner_technique="ss")
     assert hier.mean_claim_latency < flat.mean_claim_latency
+
+
+# ---------------------------------------------------------------------------
+# Adaptive techniques (af / awf_b..e): EXPERIMENTS.md Sec. 3 ordering locks.
+# ---------------------------------------------------------------------------
+
+ADAPTIVE_N, ADAPTIVE_P = 8_000, 16
+
+
+def run_small(tech, impl="one_sided", weights=None, seed=7, **kw):
+    """A 16-PE mix with 4 PEs at half speed (the 2x-slow straggler set)."""
+    speeds = np.ones(ADAPTIVE_P)
+    speeds[-4:] = 0.5
+    spec = LoopSpec(tech, N=ADAPTIVE_N, P=ADAPTIVE_P, weights=weights)
+    return simulate(SimConfig(spec, speeds, np.full(ADAPTIVE_N, 2e-3),
+                              impl=impl, seed=seed, **kw))
+
+
+@pytest.mark.parametrize("tech", ["af", "awf_b", "awf_c", "awf_d", "awf_e"])
+@pytest.mark.parametrize("impl", ["one_sided", "two_sided"])
+def test_adaptive_conserves_and_is_deterministic(tech, impl):
+    a = run_small(tech, impl)
+    b = run_small(tech, impl)
+    assert a.per_pe_iters.sum() == ADAPTIVE_N
+    assert a.T_loop == b.T_loop
+    assert (a.per_pe_iters == b.per_pe_iters).all()
+    assert a.n_claims == b.n_claims
+
+
+@pytest.mark.parametrize("tech", ["af", "awf_b", "awf_c", "awf_d", "awf_e"])
+def test_adaptive_schedule_distinct_from_static_parent(tech):
+    """fac2 -> af and awf -> awf_b..e must *change* the schedule once
+    telemetry exists (the adaptive rows of arXiv:1804.11115 are new rows,
+    not aliases)."""
+    parent = run_small("fac2" if tech == "af" else "awf")
+    adaptive = run_small(tech)
+    assert (parent.n_claims != adaptive.n_claims
+            or (parent.per_pe_iters != adaptive.per_pe_iters).any())
+
+
+@pytest.mark.parametrize("tech", ["af", "awf_b", "awf_c"])
+def test_adaptive_not_worse_than_stale_static_wf(tech):
+    """The reason the family exists: static WF with stale weights (favoring
+    the now-slow PEs) loses to online measurement on a 2x-slow-PE mix."""
+    stale = np.ones(ADAPTIVE_P)
+    stale[-4:] = 2.0  # yesterday's fast PEs are today's slow ones
+    stale = tuple(ADAPTIVE_P * stale / stale.sum())
+    wf = run_small("wf", weights=stale)
+    adaptive = run_small(tech)
+    assert adaptive.T_loop < wf.T_loop
+
+
+def test_adaptive_hierarchical_conserves_with_adaptive_inner():
+    r = run_small("gss", impl="hierarchical", nodes=4, inner_technique="af")
+    assert r.per_pe_iters.sum() == ADAPTIVE_N
+    r = run_small("awf_b", impl="hierarchical", nodes=4,
+                  inner_technique="awf_c")
+    assert r.per_pe_iters.sum() == ADAPTIVE_N
