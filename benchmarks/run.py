@@ -42,6 +42,11 @@ def main() -> None:
 
     overhead.main(quick=quick)
 
+    print("# === Replay: predicted vs native + technique=auto selection ===")
+    from benchmarks import replay_predict
+
+    replay_predict.main(quick=quick)
+
     print("# === Kernels (interpret mode; see header caveat) ===")
     from benchmarks import kernels_bench
 

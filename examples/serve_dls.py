@@ -42,11 +42,14 @@ def process(chunk, worker):
     return float(sum(r.max_new for r in chunk)) * tok_cost + 0.01
 
 
-for tech in ["gss", "fac2", "ss"]:
+for tech in ["gss", "fac2", "ss", "auto"]:
     cb = ContinuousBatcher(n_workers=4, technique=tech)
     t = cb.schedule(reqs, process)
+    label = tech
+    if tech == "auto":  # replay-predicted selection from the queue's shape
+        label = f"auto->{cb.last_report.auto_decision['chosen']}"
     ts = cb.schedule(reqs, process, static=True)
-    print(f"{tech:5s}: makespan={t.max():.2f}s p99={np.percentile(t,99):.2f}s | "
+    print(f"{label:10s}: makespan={t.max():.2f}s p99={np.percentile(t,99):.2f}s | "
           f"static: makespan={ts.max():.2f}s p99={np.percentile(ts,99):.2f}s")
 
 # and one real generation pass to prove the engine path end-to-end

@@ -96,6 +96,12 @@ class SimConfig:
     # calibration".
     o_meas_cov: float = 0.05
     o_adapt_lag: float = 1e-3
+    # Collect a per-chunk event trace (``SimResult.chunk_trace``): one dict
+    # per executed chunk with the claiming PE, grant-order step, iteration
+    # range, virtual start/end timestamps, and claim latency -- the DES leg
+    # of the ``repro.replay`` data plane (EXPERIMENTS.md Sec. 4).  Off by
+    # default: paper-scale grids take millions of chunks.
+    collect_trace: bool = False
 
     def __post_init__(self):
         self.speeds = np.asarray(self.speeds, dtype=np.float64)
@@ -121,6 +127,10 @@ class SimResult:
     mean_claim_latency: float = 0.0  # mean time from claim issue to grant
     n_rmw_global: int = 0  # RMWs served by the global window
     n_rmw_local: int = 0  # RMWs served by node-local windows (hierarchical)
+    # Per-chunk event trace (``SimConfig.collect_trace``): dicts with keys
+    # pe/step/start/size/t0/t1/lat on the virtual clock, in grant order --
+    # the same record shape the native executors emit (repro.replay).
+    chunk_trace: Optional[List[dict]] = None
 
     def summary(self) -> str:
         return (
@@ -240,6 +250,7 @@ def _simulate_one_sided(cf: SimConfig) -> SimResult:
     claim_latencies = []
     n_claims = 0
     n_rmw = 0
+    trace = [] if cf.collect_trace else None
 
     def push(t, kind, pe, payload=None):
         heapq.heappush(evq, (t, next(seq), kind, pe, payload))
@@ -304,6 +315,10 @@ def _simulate_one_sided(cf: SimConfig) -> SimResult:
             stop = min(start + k, N)
             iters[pe] += stop - start
             exec_t = (pref[stop] - pref[start]) / cf.speeds[pe]
+            if trace is not None:
+                trace.append({"pe": pe, "step": n_claims - 1, "start": start,
+                              "size": stop - start, "t0": t_got,
+                              "t1": t_got + exec_t, "lat": lat})
             if tele is not None:
                 tele.observe(pe, stop - start, exec_t, lat, t_got + exec_t)
             push(t_got + exec_t + cf.o_issue / cf.speeds[pe], "want_rmw1", pe)
@@ -321,6 +336,7 @@ def _simulate_one_sided(cf: SimConfig) -> SimResult:
         per_pe_iters=iters,
         mean_claim_latency=float(np.mean(claim_latencies)) if claim_latencies else 0.0,
         n_rmw_global=n_rmw,
+        chunk_trace=trace,
     )
 
 
@@ -387,6 +403,7 @@ def _simulate_hierarchical(cf: SimConfig) -> SimResult:
     n_rmw_global = 0
     n_rmw_local = 0
     done_pes = 0
+    trace = [] if cf.collect_trace else None
 
     def push(t, kind, pe, payload=None):
         heapq.heappush(evq, (t, next(seq), kind, pe, payload))
@@ -495,6 +512,10 @@ def _simulate_hierarchical(cf: SimConfig) -> SimResult:
             b = s["start"] + min(off + k, s["size"])
             iters[pe] += b - a
             exec_t = (pref[b] - pref[a]) / cf.speeds[pe]
+            if trace is not None:
+                trace.append({"pe": pe, "step": n_claims - 1, "start": a,
+                              "size": b - a, "t0": t, "t1": t + exec_t,
+                              "lat": lat})
             if tele is not None:
                 tele.observe(pe, b - a, exec_t, lat, t + exec_t)
             push(t + exec_t + cf.o_issue_local / cf.speeds[pe], "want_l1", pe)
@@ -551,6 +572,7 @@ def _simulate_hierarchical(cf: SimConfig) -> SimResult:
         mean_claim_latency=float(np.mean(claim_latencies)) if claim_latencies else 0.0,
         n_rmw_global=n_rmw_global,
         n_rmw_local=n_rmw_local,
+        chunk_trace=trace,
     )
 
 
@@ -636,6 +658,7 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
     serve_time = 0.0
     claim_started = {}
     claim_latencies = []
+    trace = [] if cf.collect_trace else None
 
     # Master's own work: a claimed chunk it burns down in time slices of
     # ``master_quantum`` seconds, checking the queue in between (fine-grained
@@ -683,7 +706,8 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
                 start, k = res
                 iters[m] += k
                 exec_t = (pref[start + k] - pref[start]) / s_m
-                master_chunk = [exec_t, k, exec_t]
+                # [remaining_s, iters, exec_s, start, step, t_claimed]
+                master_chunk = [exec_t, k, exec_t, start, n_claims - 1, now]
                 dt = cf.t_calc / s_m
                 master_busy = True
                 push(now + dt, "master_claimed", m, None)
@@ -724,6 +748,10 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
             stop = nonlocal_start + k
             iters[pe] += k
             exec_t = (pref[stop] - pref[nonlocal_start]) / cf.speeds[pe]
+            if trace is not None:
+                trace.append({"pe": pe, "step": n_claims - 1,
+                              "start": nonlocal_start, "size": k, "t0": t,
+                              "t1": t + exec_t, "lat": lat})
             if tele is not None:
                 tele.observe(pe, k, exec_t, lat, t + exec_t)
             push(t + exec_t, "worker_done_chunk", pe)
@@ -733,6 +761,13 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
         elif kind == "master_slice_done":
             master_busy = False
             if master_chunk[0] <= 1e-15:
+                if trace is not None:
+                    # t0 is claim time: master chunks interleave with serving,
+                    # so t1 - t0 >= exec_s (the serve slices are inside).
+                    trace.append({"pe": m, "step": master_chunk[4],
+                                  "start": master_chunk[3],
+                                  "size": master_chunk[1],
+                                  "t0": master_chunk[5], "t1": t, "lat": 0.0})
                 if tele is not None:
                     tele.observe(m, master_chunk[1], master_chunk[2], 0.0, t)
                 master_chunk = None
@@ -755,6 +790,7 @@ def _simulate_two_sided(cf: SimConfig) -> SimResult:
         per_pe_iters=iters,
         master_serve_time=serve_time,
         mean_claim_latency=float(np.mean(claim_latencies)) if claim_latencies else 0.0,
+        chunk_trace=trace,
     )
 
 

@@ -46,12 +46,19 @@ def execute(session, work_fn: Optional[WorkFn], executor: str = "threads",
 
 
 def _run_chunk(session, pe: int, c: Claim, work_fn: Optional[WorkFn],
-               sched_seconds: float = 0.0) -> None:
+               sched_seconds: float = 0.0,
+               origin: Optional[float] = None) -> None:
     t0 = time.perf_counter()
     if work_fn is not None:
         work_fn(c.start, c.stop)
-    session.record(pe, c.size, time.perf_counter() - t0,
-                   sched_seconds=sched_seconds)
+    t1 = time.perf_counter()
+    if origin is None:
+        session.record(pe, c.size, t1 - t0, sched_seconds=sched_seconds)
+    else:
+        # Timestamps relative to the executor's start feed the per-chunk
+        # timing log (SessionReport.chunk_times -- the replay capture plane).
+        session.record(pe, c.size, t1 - t0, sched_seconds=sched_seconds,
+                       claim=c, t_start=t0 - origin, t_end=t1 - origin)
 
 
 def _timed_claim(session, pe: int):
@@ -79,7 +86,7 @@ def _serial(session, work_fn: Optional[WorkFn]):
                 done[pe] = True
                 n_done += 1
             else:
-                _run_chunk(session, pe, c, work_fn, sched)
+                _run_chunk(session, pe, c, work_fn, sched, origin=t0)
         pe = (pe + 1) % P
     return session.report("serial", wall_time=time.perf_counter() - t0)
 
@@ -99,7 +106,7 @@ def _threads_one_sided(session, work_fn: Optional[WorkFn],
             c, sched = _timed_claim(session, pe)
             if c is None:
                 return
-            _run_chunk(session, pe, c, work_fn, sched)
+            _run_chunk(session, pe, c, work_fn, sched, origin=t0)
 
     threads = [threading.Thread(target=worker, args=(j,), name=f"dls-{j}")
                for j in range(n_threads)]
@@ -124,15 +131,15 @@ def _threads_two_sided(session, work_fn: Optional[WorkFn],
 
     def worker(pe: int):
         while True:
-            t0 = time.perf_counter()
+            tc = time.perf_counter()
             af = session.policy.af_stats(pe) if session._wants_af else None
             reply = rt.request(pe, weight=session.policy.weight(pe), af=af)
             c = reply.get()
-            sched = time.perf_counter() - t0
+            sched = time.perf_counter() - tc
             if c is None:
                 return
             session.log_claim(pe, c)
-            _run_chunk(session, pe, c, work_fn, sched)
+            _run_chunk(session, pe, c, work_fn, sched, origin=t0)
 
     def master():
         my_claim: Optional[Claim] = None
@@ -149,7 +156,8 @@ def _threads_two_sided(session, work_fn: Optional[WorkFn],
                                 break
                     rt.serve_pending()
                     return
-            _run_chunk(session, master_pe, my_claim, work_fn, my_sched)
+            _run_chunk(session, master_pe, my_claim, work_fn, my_sched,
+                       origin=t0)
             my_claim = None
 
     threads = [
@@ -175,7 +183,9 @@ def _sim(session, costs=None, speeds=None, **sim_kw):
     ``speeds``: per-PE relative speed (length P, defaults to homogeneous).
     Wall time in the returned report is the *virtual* ``T_p^loop``.
     Hierarchical sessions carry their ``nodes``/``inner_technique`` into the
-    DES and report per-level RMW counts.
+    DES and report per-level RMW counts.  ``collect_trace=True`` records
+    the DES's per-chunk events into ``report.chunk_times`` (virtual-clock
+    timestamps) so simulated runs are replayable like native ones.
     """
     from repro.core.scheduler import HierarchicalRuntime
     from repro.core.sim import SimConfig, simulate
@@ -191,12 +201,20 @@ def _sim(session, costs=None, speeds=None, **sim_kw):
         sim_kw.setdefault("inner_technique", session.runtime.inner_technique)
     r = simulate(SimConfig(spec, np.asarray(speeds), np.asarray(costs),
                            impl=session.runtime_kind, **sim_kw))
+    chunk_times = None
+    if r.chunk_trace is not None:
+        # Canonical completion-ordering (two-sided master chunks are
+        # recorded at completion, out of grant order).
+        chunk_times = sorted(r.chunk_trace,
+                             key=lambda d: (d["t0"], d["t1"], d["pe"]))
     return SessionReport(
         technique=spec.technique,
         N=spec.N,
         P=spec.P,
         runtime=session.runtime_kind,
         executor="sim",
+        min_chunk=spec.min_chunk,
+        max_chunk=spec.max_chunk,
         per_pe_claims=[[] for _ in range(spec.P)],  # DES logs counts, not claims
         per_pe_iters=np.asarray(r.per_pe_iters, dtype=np.int64),
         busy_time=np.asarray(r.finish, dtype=np.float64),
@@ -204,4 +222,6 @@ def _sim(session, costs=None, speeds=None, **sim_kw):
         n_claims=r.n_claims,
         n_rmw_global=r.n_rmw_global,
         n_rmw_local=r.n_rmw_local,
+        chunk_times=chunk_times,
+        auto_decision=session.auto_decision,
     )

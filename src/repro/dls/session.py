@@ -85,6 +85,12 @@ class DLSession:
             self.runtime_kind = "two_sided"
         self._claim_log: List[List[Claim]] = [[] for _ in range(spec.P)]
         self._busy: List[float] = [0.0] * spec.P
+        # Per-chunk timing records (repro.replay capture plane): appended in
+        # completion order by ``record`` when executors pass timestamps.
+        self._chunk_times: List[dict] = []
+        # technique="auto" selection record, set by ``loop`` (DESIGN.md
+        # Sec. 9); threaded into every report.
+        self.auto_decision: Optional[dict] = None
         self._grow_lock = threading.Lock()  # only for pe >= P growth
         # Adaptive wiring (DESIGN.md Sec. 8): AF feeds measured AFStats to
         # the claim-level technique (the inner one for hierarchical
@@ -153,12 +159,19 @@ class DLSession:
             self._claim_log[pe].append(c)
 
     def record(self, pe: int, iters: int, seconds: float,
-               sched_seconds: float = 0.0) -> None:
+               sched_seconds: float = 0.0, *,
+               claim: Optional[Claim] = None,
+               t_start: Optional[float] = None,
+               t_end: Optional[float] = None) -> None:
         """Feed back observed execution: adaptive weights + busy metrics.
 
         ``sched_seconds`` is the scheduling overhead paid to obtain the
         chunk (claim latency) -- consumed by the overhead-timing AWF
         variants (D/E); executors measure and pass it automatically.
+
+        ``claim``/``t_start``/``t_end`` (executor-supplied, seconds since
+        the executor began) additionally log a per-chunk timing record --
+        the ``repro.replay`` capture plane (``SessionReport.chunk_times``).
         """
         if self._record_style == "positional":
             self.policy.record(pe, iters, seconds, sched_seconds)
@@ -169,6 +182,16 @@ class DLSession:
         if self.record_metrics:
             self._ensure_pe(pe)
             self._busy[pe] += seconds
+            if t_start is not None and t_end is not None:
+                self._chunk_times.append({
+                    "pe": pe,
+                    "step": claim.step if claim is not None else -1,
+                    "start": claim.start if claim is not None else -1,
+                    "size": iters,
+                    "t0": float(t_start),
+                    "t1": float(t_end),
+                    "lat": float(sched_seconds),
+                })
 
     def advance_timestep(self) -> None:
         """Signal a timestep boundary to timestep-granular adaptive policies
@@ -220,6 +243,8 @@ class DLSession:
             P=self.spec.P,
             runtime=self.runtime_kind,
             executor=executor,
+            min_chunk=self.spec.min_chunk,
+            max_chunk=self.spec.max_chunk,
             per_pe_claims=[list(per) for per in self._claim_log],
             per_pe_iters=np.array(
                 [sum(c.size for c in per) for per in self._claim_log],
@@ -229,6 +254,8 @@ class DLSession:
             n_rmw_global=rmw_g,
             n_rmw_local=rmw_l,
             adaptation=self._adaptation_trace(),
+            chunk_times=list(self._chunk_times) or None,
+            auto_decision=self.auto_decision,
         )
 
     def _adaptation_trace(self) -> Optional[List[dict]]:
@@ -279,6 +306,7 @@ class DLSession:
             self.runtime.restore({"i": 0, "lp": 0})
         self._claim_log = [[] for _ in range(len(self._claim_log))]
         self._busy = [0.0] * len(self._busy)
+        self._chunk_times = []
         self._wire_outer_weights()  # fresh runtime objects need re-pointing
         self._rmw_base = self._rmw_snapshot()  # metrics restart at zero
         if not self.record_metrics and isinstance(self.policy, UniformWeights):
@@ -326,10 +354,19 @@ def loop(
     record_metrics: bool = True,
     nodes: Optional[int] = None,
     inner_technique: Optional[str] = None,
+    costs=None,
+    speeds=None,
+    trace=None,
+    auto_seed: int = 0,
+    auto_budget_s: Optional[float] = 2.0,
 ) -> DLSession:
     """Open a DLS session over ``[0, N)`` -- the facade's front door.
 
     N, technique, P, min_chunk, max_chunk: the ``LoopSpec`` fields.
+        ``technique="auto"`` runs the calibrated DES sweep of
+        ``repro.replay`` (seeded, bounded-time) over every technique and
+        adopts the predicted-best one; the decision (chosen technique +
+        full predicted ranking) lands in ``SessionReport.auto_decision``.
     runtime: "one_sided" (paper protocol) | "two_sided" (master-worker) |
         "hierarchical" (two-level node/global scheduling; needs ``nodes=``).
     window: "thread" | "kvstore" | "sim" | "auto" | a shared ``Window``
@@ -348,7 +385,29 @@ def loop(
         scheduling domains, and the technique used *within* a node
         (defaults to SS; ``technique`` becomes the outer, super-chunk-level
         technique).  Rejected for flat runtimes.
+    costs / speeds / trace / auto_seed / auto_budget_s: selection inputs,
+        consumed only by ``technique="auto"`` -- a per-iteration cost hint
+        (any length; resampled), a per-PE speed hint, a recorded
+        ``repro.replay`` Trace (or path) to calibrate the sweep from, the
+        sweep's DES seed, and its wall-clock budget in seconds (None =
+        unbounded).  See DESIGN.md Sec. 9.
     """
+    auto_decision = None
+    if technique == "auto":
+        from repro.replay.select import choose_technique
+
+        auto_decision = choose_technique(
+            N=N, P=P, runtime=runtime, nodes=nodes,
+            inner_technique=inner_technique, costs=costs, speeds=speeds,
+            trace=trace, min_chunk=min_chunk, max_chunk=max_chunk,
+            seed=auto_seed, budget_s=auto_budget_s)
+        technique = auto_decision["chosen"]
+    elif costs is not None or speeds is not None or trace is not None:
+        warnings.warn(
+            "costs=/speeds=/trace= are technique=\"auto\" selection hints "
+            "and have no effect on an explicitly chosen technique "
+            "(pass executor costs to execute(..., executor=\"sim\") instead)",
+            stacklevel=2)
     spec_weights = None
     if (weights is not None and not isinstance(weights, str)
             and hasattr(weights, "__len__") and len(weights) == P):
@@ -381,4 +440,7 @@ def loop(
             f"{POLICY_DRIVEN} consume a weight policy); the supplied policy "
             f"will have no effect",
             stacklevel=2)
-    return DLSession(spec, rt, weights=policy, record_metrics=record_metrics)
+    session = DLSession(spec, rt, weights=policy,
+                        record_metrics=record_metrics)
+    session.auto_decision = auto_decision
+    return session

@@ -1,0 +1,390 @@
+"""repro.replay: capture, round-trip, calibration, prediction, auto, CLI.
+
+The acceptance contract of the replay subsystem (DESIGN.md Sec. 9):
+
+* traces round-trip byte-stably through JSONL and the ``TraceStore``;
+* ``SessionReport`` persists (``to_json``/``from_json``, versioned);
+* calibrate/predict are deterministic for a fixed trace + seed;
+* a recorded sim trace, replayed through the calibrated DES, reproduces
+  the native ``T_loop`` within a pinned percent error;
+* ``dls.loop(..., technique="auto")`` selects the predicted-best
+  technique (top of its own sweep) and records the decision;
+* the ``python -m repro.replay`` CLI records/renders end to end.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro import dls
+from repro.core.chunk_calculus import TECHNIQUES
+from repro.replay import (
+    Trace,
+    TraceStore,
+    calibrate,
+    choose_technique,
+    gantt_ascii,
+    gantt_svg,
+    predict,
+    sweep,
+)
+
+N, P, SEED = 2_000, 4, 0
+
+
+def _workload(n=N, seed=SEED, mean=1e-3, cov=0.3):
+    rng = np.random.default_rng(seed)
+    sigma = np.sqrt(np.log(1 + cov * cov))
+    return rng.lognormal(np.log(mean) - sigma**2 / 2, sigma, size=n)
+
+
+def _het_speeds(p=P):
+    s = np.ones(p)
+    s[p // 2:] = 0.5
+    return s
+
+
+def _sim_trace(technique="fac2", runtime="one_sided", n=N, p=P, seed=SEED,
+               **loop_kw):
+    session = dls.loop(n, technique=technique, P=p, runtime=runtime,
+                       **loop_kw)
+    report = session.execute(None, executor="sim", costs=_workload(n),
+                             speeds=_het_speeds(p), seed=seed,
+                             collect_trace=True)
+    return Trace.from_report(report, meta={"seed": seed}), report
+
+
+# ---------------------------------------------------------------------------
+# capture
+# ---------------------------------------------------------------------------
+
+
+def test_sim_executor_captures_chunk_times():
+    trace, report = _sim_trace()
+    assert report.chunk_times, "sim executor must emit chunk timing"
+    assert trace.iters_covered() == N
+    assert all(r.t1 >= r.t0 >= 0.0 for r in trace.records)
+    assert max(r.t1 for r in trace.records) <= report.wall_time + 1e-9
+
+
+@pytest.mark.parametrize("runtime,kw", [
+    ("one_sided", {}),
+    ("two_sided", {}),
+    ("hierarchical", {"nodes": 2, "inner_technique": "ss"}),
+])
+def test_capture_covers_loop_any_runtime(runtime, kw):
+    trace, _ = _sim_trace(technique="gss", runtime=runtime, n=800, **kw)
+    assert trace.iters_covered() == 800
+    # every iteration exactly once
+    seen = np.zeros(800, dtype=np.int64)
+    for r in trace.records:
+        seen[r.start:r.stop] += 1
+    assert (seen == 1).all()
+
+
+def test_serial_executor_captures_chunk_times():
+    session = dls.loop(500, technique="fac2", P=4)
+    report = session.execute(lambda a, b: None, executor="serial")
+    assert report.chunk_times and len(report.chunk_times) == report.steps
+    trace = Trace.from_report(report)
+    assert trace.iters_covered() == 500
+
+
+def test_threads_executor_captures_chunk_times():
+    session = dls.loop(300, technique="gss", P=4)
+    report = session.execute(
+        lambda a, b: time.sleep(1e-4 * (b - a)), executor="threads")
+    trace = Trace.from_report(report)
+    assert trace.iters_covered() == 300
+    assert all(r.seconds >= 0 for r in trace.records)
+
+
+# ---------------------------------------------------------------------------
+# round trips (byte-stable)
+# ---------------------------------------------------------------------------
+
+
+def test_trace_jsonl_round_trip_byte_stable():
+    trace, _ = _sim_trace()
+    text = trace.to_jsonl()
+    again = Trace.from_jsonl(text)
+    assert again.to_jsonl() == text
+    assert again.technique == trace.technique
+    assert len(again.records) == len(trace.records)
+    assert again.records[0] == trace.records[0]
+
+
+def test_trace_store_save_load(tmp_path):
+    trace, _ = _sim_trace()
+    store = TraceStore(tmp_path / "traces")
+    p1 = store.save(trace)
+    p2 = store.save(trace)  # no overwrite: suffixed
+    assert p1 != p2 and p1.exists() and p2.exists()
+    assert store.load(p1.name).to_jsonl() == trace.to_jsonl()
+    assert len(store.list()) == 2
+
+
+def test_trace_version_gate():
+    trace, _ = _sim_trace(n=200)
+    bad = trace.to_jsonl().splitlines()
+    header = json.loads(bad[0])
+    header["version"] = 999
+    bad[0] = json.dumps(header)
+    with pytest.raises(ValueError, match="version"):
+        Trace.from_jsonl("\n".join(bad))
+
+
+def test_session_report_json_round_trip():
+    _, report = _sim_trace(technique="awf_b")  # exercises adaptation field
+    text = report.to_json()
+    again = dls.SessionReport.from_json(text)
+    assert again.to_json() == text
+    assert again.technique == report.technique
+    assert again.steps == report.steps
+    assert (again.per_pe_iters == report.per_pe_iters).all()
+    np.testing.assert_allclose(again.busy_time, report.busy_time)
+    assert json.loads(text)["schema_version"] == 1
+
+
+def test_session_report_json_round_trip_with_claims():
+    session = dls.loop(400, technique="tss", P=4)
+    report = session.execute(lambda a, b: None, executor="serial")
+    again = dls.SessionReport.from_json(report.to_json())
+    assert again.chunk_sizes == report.chunk_sizes
+    assert [c.step for c in again.claims] == [c.step for c in report.claims]
+
+
+def test_session_report_version_gate():
+    _, report = _sim_trace(n=200)
+    d = report.to_dict()
+    d["schema_version"] = 999
+    with pytest.raises(ValueError, match="schema_version"):
+        dls.SessionReport.from_dict(d)
+
+
+# ---------------------------------------------------------------------------
+# calibration: the percent-error regression bound
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_recovers_speeds_and_costs():
+    trace, _ = _sim_trace(technique="fac2")
+    calib = calibrate(trace)
+    # 2:1 speed mix: fastest == 1.0, slow half ~0.5
+    assert calib.speeds.max() == pytest.approx(1.0)
+    assert calib.speeds[P // 2:].mean() == pytest.approx(0.5, rel=0.05)
+    assert calib.cost_mean == pytest.approx(1e-3, rel=0.15)
+    assert len(calib.costs) == N
+
+
+@pytest.mark.parametrize("technique,runtime,bound", [
+    ("fac2", "one_sided", 5.0),
+    ("gss", "one_sided", 5.0),
+    ("ss", "one_sided", 5.0),
+    ("gss", "two_sided", 8.0),
+])
+def test_percent_error_regression(technique, runtime, bound):
+    """A recorded sim trace replays within the documented percent error
+    (EXPERIMENTS.md Sec. 4; seeded, so this is a regression pin)."""
+    trace, _ = _sim_trace(technique=technique, runtime=runtime)
+    err = calibrate(trace, seed=SEED).percent_error()
+    assert err < bound, f"{technique}/{runtime} percent error {err:.2f}%"
+
+
+def test_calibration_carries_chunk_bounds_and_seed():
+    """min_chunk/max_chunk and the recorded seed survive capture ->
+    serialization -> calibration, so replay schedules with the native
+    bounds and noise stream (not silent defaults)."""
+    trace, _ = _sim_trace(technique="ss", n=800, seed=5,
+                          min_chunk=25, max_chunk=200)
+    again = Trace.from_jsonl(trace.to_jsonl())
+    assert (again.min_chunk, again.max_chunk) == (25, 200)
+    calib = calibrate(again)
+    assert (calib.min_chunk, calib.max_chunk) == (25, 200)
+    assert calib.seed == 5  # from meta, not the default
+    # SS with min_chunk=25: every replayed chunk must honor the bound
+    cf = calib.sim_config()
+    assert cf.spec.min_chunk == 25 and cf.spec.max_chunk == 200
+    assert calib.percent_error() < 5.0
+
+
+def test_empty_costs_hint_rejected():
+    with pytest.raises(ValueError, match="empty"):
+        dls.loop(100, technique="auto", P=2, costs=[])
+
+
+def test_percent_error_hierarchical():
+    trace, _ = _sim_trace(technique="gss", runtime="hierarchical",
+                          nodes=2, inner_technique="ss")
+    err = calibrate(trace, nodes=2, inner_technique="ss",
+                    seed=SEED).percent_error()
+    assert err < 10.0, f"hierarchical percent error {err:.2f}%"
+
+
+# ---------------------------------------------------------------------------
+# prediction: determinism + ranking sanity
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_predict_deterministic():
+    trace, _ = _sim_trace()
+    a = predict(trace, seed=7, budget_s=None)
+    b = predict(trace, seed=7, budget_s=None)
+    assert a["percent_error"] == b["percent_error"]
+    assert [p.to_dict() for p in a["ranking"]] == \
+        [p.to_dict() for p in b["ranking"]]
+    assert len(a["ranking"]) == len(TECHNIQUES)
+    np.testing.assert_array_equal(a["calibration"].costs,
+                                  b["calibration"].costs)
+
+
+def test_sweep_ranks_static_last_on_heterogeneous():
+    """On a 2:1 cluster with no weights, static chunking must rank badly
+    (the slow half drags T_loop ~2x) -- the sweep must see that."""
+    trace, _ = _sim_trace(technique="fac2")
+    calib = calibrate(trace)
+    ranking = sweep(calib, seed=SEED)
+    techs = [p.technique for p in ranking]
+    assert techs.index("static") >= len(techs) - 2
+    t = {p.technique: p.T_loop for p in ranking}
+    assert t["static"] > 1.4 * t["fac2"]
+
+
+def test_sweep_budget_keeps_prefix():
+    trace, _ = _sim_trace(n=500)
+    calib = calibrate(trace)
+    ranking = sweep(calib, seed=SEED, budget_s=0.0)
+    assert len(ranking) >= 1  # at least one candidate always evaluated
+
+
+# ---------------------------------------------------------------------------
+# technique="auto" facade path
+# ---------------------------------------------------------------------------
+
+
+def test_auto_selects_and_runs():
+    session = dls.loop(N, technique="auto", P=P, auto_seed=SEED,
+                       auto_budget_s=None)
+    d = session.auto_decision
+    assert d is not None and session.spec.technique == d["chosen"]
+    assert session.spec.technique in TECHNIQUES
+    # chosen is within the top-2 of its own sweep (acceptance criterion)
+    top2 = [r["technique"] for r in d["ranking"][:2]]
+    assert d["chosen"] in top2
+    report = session.execute(lambda a, b: None, executor="serial")
+    assert report.total_iters == N
+    assert report.auto_decision == d
+    # the decision survives report persistence
+    again = dls.SessionReport.from_json(report.to_json())
+    assert again.auto_decision["chosen"] == d["chosen"]
+
+
+def test_auto_deterministic_for_seed():
+    d1 = dls.loop(N, technique="auto", P=P, auto_seed=3,
+                  auto_budget_s=None).auto_decision
+    d2 = dls.loop(N, technique="auto", P=P, auto_seed=3,
+                  auto_budget_s=None).auto_decision
+    assert d1["ranking"] == d2["ranking"]
+    assert d1["chosen"] == d2["chosen"]
+
+
+def test_auto_from_trace_beats_bad_static():
+    """Calibrated auto on a heterogeneous trace picks a technique whose
+    *native* T_loop beats the deliberately bad static choice."""
+    trace, _ = _sim_trace(technique="fac2")
+    d = choose_technique(N=N, P=P, runtime="one_sided", trace=trace,
+                         seed=SEED, budget_s=None, max_sim_iters=N)
+    assert d["source"] == "trace"
+    costs, speeds = _workload(), _het_speeds()
+
+    def native(tech):
+        return dls.loop(N, technique=tech, P=P).execute(
+            None, executor="sim", costs=costs, speeds=speeds,
+            seed=SEED).wall_time
+
+    assert native(d["chosen"]) < native("static")
+
+
+def test_auto_accepts_cost_hints():
+    session = dls.loop(1_000, technique="auto", P=4,
+                       costs=np.linspace(1.0, 5.0, 100), auto_seed=SEED)
+    assert session.auto_decision["source"] == "hints"
+    assert session.spec.technique in TECHNIQUES
+
+
+def test_hints_warn_without_auto():
+    with pytest.warns(UserWarning, match="selection hints"):
+        dls.loop(100, technique="fac2", P=2, costs=np.ones(10))
+
+
+def test_auto_in_continuous_batcher():
+    from repro.serve.engine import ContinuousBatcher, Request
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 64, 4).astype(np.int32),
+                    max_new=int(l))
+            for i, l in enumerate(rng.integers(2, 64, size=32))]
+    cb = ContinuousBatcher(n_workers=4, technique="auto")
+    done = cb.schedule(reqs, lambda chunk, w: 1e-3 * sum(
+        r.max_new for r in chunk))
+    assert done.shape == (32,) and (done > 0).all()
+    d = cb.last_report.auto_decision
+    assert d is not None and d["source"] == "hints"
+    assert cb.last_report.technique == d["chosen"]
+
+
+# ---------------------------------------------------------------------------
+# gantt
+# ---------------------------------------------------------------------------
+
+
+def test_gantt_renders():
+    trace, _ = _sim_trace(n=400)
+    txt = gantt_ascii(trace, width=40)
+    assert txt.count("\n") >= P  # one row per PE + header/footer
+    assert "pe  0" in txt
+    svg = gantt_svg(trace)
+    assert svg.startswith("<svg") and svg.rstrip().endswith("</svg>")
+    assert svg.count("<rect") >= len(trace.records)
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke
+# ---------------------------------------------------------------------------
+
+
+def _cli(args, cwd):
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    return subprocess.run([sys.executable, "-m", "repro.replay"] + args,
+                          capture_output=True, text=True, cwd=cwd, env=env,
+                          timeout=120)
+
+
+def test_cli_record_calibrate_predict_gantt(tmp_path):
+    r = _cli(["record", "--n", "400", "--p", "4", "--technique", "fac2",
+              "--executor", "sim", "--het", "--store", "traces",
+              "--name", "smoke"], cwd=tmp_path)
+    assert r.returncode == 0, r.stderr
+    trace_path = tmp_path / "traces" / "smoke.jsonl"
+    assert trace_path.exists()
+
+    r = _cli(["calibrate", "--trace", str(trace_path)], cwd=tmp_path)
+    assert r.returncode == 0, r.stderr
+    assert "percent error" in r.stdout
+
+    r = _cli(["predict", "--trace", str(trace_path),
+              "--max-sim-iters", "400"], cwd=tmp_path)
+    assert r.returncode == 0, r.stderr
+    assert "rank" in r.stdout
+
+    r = _cli(["gantt", "--trace", str(trace_path), "--svg", "g.svg",
+              "--width", "50"], cwd=tmp_path)
+    assert r.returncode == 0, r.stderr
+    assert "pe  0" in r.stdout
+    assert (tmp_path / "g.svg").read_text().startswith("<svg")
