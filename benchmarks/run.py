@@ -1,58 +1,68 @@
 """Benchmark aggregator: one section per paper table/figure + system benches.
 
-``python -m benchmarks.run``         -- quick mode (CI-friendly, ~2-4 min)
-``python -m benchmarks.run --full``  -- paper-scale DES grids (tens of min)
+``python -m benchmarks.run``              -- quick mode (CI-friendly)
+``python -m benchmarks.run --full``       -- paper-scale DES grids
+``python -m benchmarks.run --list``       -- show the registry
+``python -m benchmarks.run --only NAME``  -- run one benchmark (repeatable)
 
 Prints ``name,us_per_call,derived`` CSV rows per the harness convention;
 section headers are comment lines.
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 
-def main() -> None:
-    full = "--full" in sys.argv
-    quick = not full
-    t0 = time.time()
-
-    print("# === Table 2: chunk calculus (closed form vs recurrence) ===")
+def _table2(quick: bool) -> None:
     from benchmarks import table2_chunks
 
     table2_chunks.main(N=100_000 if quick else 1_000_000)
 
-    print("# === Fig. 4: PSIA DES grid (calibration in EXPERIMENTS.md) ===")
+
+def _fig4(quick: bool) -> None:
     from benchmarks import fig4_psia
 
     fig4_psia.main(quick=quick)
 
-    print("# === Fig. 5: Mandelbrot DES grid (qualitative claims) ===")
+
+def _fig5(quick: bool) -> None:
     from benchmarks import fig5_mandelbrot
 
     fig5_mandelbrot.main(quick=quick)
 
-    print("# === Beyond-paper techniques (TFSS / AWF / bounded chunks) ===")
+
+def _beyond(quick: bool) -> None:
     from benchmarks import beyond_paper
 
     beyond_paper.main()
 
-    print("# === Scheduling overhead + scalability ===")
+
+def _overhead(quick: bool) -> None:
     from benchmarks import overhead
 
     overhead.main(quick=quick)
 
-    print("# === Replay: predicted vs native + technique=auto selection ===")
+
+def _replay(quick: bool) -> None:
     from benchmarks import replay_predict
 
     replay_predict.main(quick=quick)
 
-    print("# === Kernels (interpret mode; see header caveat) ===")
+
+def _sim_sweep(quick: bool) -> None:
+    from benchmarks import sim_sweep
+
+    sim_sweep.main(quick=quick)
+
+
+def _kernels(quick: bool) -> None:
     from benchmarks import kernels_bench
 
     kernels_bench.main(quick=quick)
 
-    print("# === Roofline (from dry-run artifacts, if present) ===")
+
+def _roofline(quick: bool) -> None:
     try:
         from benchmarks import roofline
 
@@ -65,8 +75,57 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         print(f"# roofline unavailable: {e}")
 
+
+#: (name, section header, runner) -- selection surface for --list/--only.
+BENCHMARKS = (
+    ("table2", "Table 2: chunk calculus (closed form vs recurrence)", _table2),
+    ("fig4_psia", "Fig. 4: PSIA DES grid (calibration in EXPERIMENTS.md)",
+     _fig4),
+    ("fig5_mandelbrot", "Fig. 5: Mandelbrot DES grid (qualitative claims)",
+     _fig5),
+    ("beyond_paper", "Beyond-paper techniques (TFSS / AWF / bounded chunks)",
+     _beyond),
+    ("overhead", "Scheduling overhead + scalability", _overhead),
+    ("replay_predict",
+     "Replay: predicted vs native + technique=auto selection", _replay),
+    ("sim_sweep",
+     "Batched sweeps: serial vs simulate_many on the predict roster",
+     _sim_sweep),
+    ("kernels", "Kernels (interpret mode; see header caveat)", _kernels),
+    ("roofline", "Roofline (from dry-run artifacts, if present)", _roofline),
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grids (tens of minutes)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered benchmarks and exit")
+    ap.add_argument("--only", action="append", metavar="NAME",
+                    help="run only this benchmark (repeatable)")
+    args = ap.parse_args(argv)
+
+    by_name = {name: (title, fn) for name, title, fn in BENCHMARKS}
+    if args.list:
+        width = max(len(n) for n in by_name)
+        for name, title, _ in BENCHMARKS:
+            print(f"{name:<{width}}  {title}")
+        return 0
+    selected = args.only if args.only else [n for n, _, _ in BENCHMARKS]
+    unknown = [n for n in selected if n not in by_name]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; see --list")
+
+    quick = not args.full
+    t0 = time.time()
+    for name in selected:
+        title, fn = by_name[name]
+        print(f"# === {title} ===")
+        fn(quick)
     print(f"# total benchmark wall time: {time.time()-t0:.0f}s")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

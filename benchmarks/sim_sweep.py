@@ -1,0 +1,90 @@
+"""Batched prediction sweeps: serial vs ``simulate_many`` on the roster.
+
+The ``replay.predict`` use-case (arXiv:1804.11115-style verification
+across many configurations): record one native run, calibrate, then
+sweep the full technique roster on both flat runtimes over the
+empirical workload.  The pre-ISSUE-5 sweep evaluated that roster one
+``simulate()`` at a time in roster order; ``simulate_many`` fans it out
+over a process pool with fork-shared cost arrays.
+
+Reported: per-leg wall time and the wall-clock speedup.  The fan-out
+upper bound is ``min(cores, candidates)`` and the roster's critical
+path is its slowest candidate, so the headline number scales with the
+machine (>= 2x needs >= 2 free cores and a roster that amortizes pool
+startup -- both legs below are sized so it does).
+
+Run:  PYTHONPATH=src python benchmarks/sim_sweep.py [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from repro import dls
+from repro.replay import Trace, calibrate, sweep
+
+RUNTIMES = ("one_sided", "two_sided")
+
+
+def workload(N: int, seed: int = 0, cov: float = 0.4,
+             mean: float = 2e-4) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    sigma = np.sqrt(np.log(1.0 + cov * cov))
+    return rng.lognormal(np.log(mean) - sigma ** 2 / 2, sigma, size=N)
+
+
+def record_roster_calibration(N: int, P: int, min_chunk: int, seed: int = 0):
+    """One native probe run -> the calibration the sweep predicts from."""
+    costs = workload(N, seed=seed)
+    speeds = np.ones(P)
+    speeds[P // 2:] = 0.5
+    session = dls.loop(N, technique="fac2", P=P, min_chunk=min_chunk)
+    report = session.execute(None, executor="sim", costs=costs,
+                             speeds=speeds, seed=seed, collect_trace=True)
+    return calibrate(Trace.from_report(report, meta={"seed": seed}),
+                     seed=seed)
+
+
+def timed_sweep(calib, workers, seed: int = 0):
+    t0 = time.perf_counter()
+    ranking = sweep(calib, runtimes=RUNTIMES, seed=seed, budget_s=None,
+                    workers=workers)
+    return ranking, time.perf_counter() - t0
+
+
+def main(quick: bool = True) -> None:
+    # A small chunk floor keeps the two SS candidates claim-heavy enough
+    # that the roster's total work (DES cost ~ #claims) amortizes pool
+    # startup, while the 2-runtime roster keeps the critical path (its
+    # slowest single candidate) well under the serial sum.
+    N, P, min_chunk = (150_000, 16, 2) if quick else (600_000, 64, 2)
+    calib = record_roster_calibration(N, P, min_chunk)
+    n_candidates = len(dls.TECHNIQUES) * len(RUNTIMES)
+    serial_rank, t_serial = timed_sweep(calib, workers=1)
+    par_rank, t_par = timed_sweep(calib, workers="auto")
+    assert [p.to_dict() for p in serial_rank] == \
+        [p.to_dict() for p in par_rank], "fan-out changed the ranking"
+    speedup = t_serial / t_par
+    cores = os.cpu_count() or 1
+    print("name,us_per_call,derived")
+    print(f"sweep_serial,{t_serial * 1e6 / n_candidates:.0f},"
+          f"wall={t_serial:.2f}s candidates={n_candidates}")
+    print(f"sweep_simulate_many,{t_par * 1e6 / n_candidates:.0f},"
+          f"wall={t_par:.2f}s workers={min(cores, n_candidates)}")
+    print(f"sim_sweep_speedup,{speedup:.2f},"
+          f"bound=min(cores={cores},candidates={n_candidates}) "
+          f"best={serial_rank[0].technique}/{serial_rank[0].runtime}")
+    if speedup < 1.0:
+        print("# WARNING: fan-out slower than serial on this machine "
+              "(pool startup dominates; grow N or use --full)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    main(quick=not args.full)

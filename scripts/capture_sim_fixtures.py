@@ -1,0 +1,66 @@
+"""Capture (or verify) the DES golden fixtures for the equivalence pins.
+
+Usage (repo root):
+
+    PYTHONPATH=src python scripts/capture_sim_fixtures.py          # write
+    PYTHONPATH=src python scripts/capture_sim_fixtures.py --check  # verify
+
+The fixtures under ``tests/fixtures/sim_golden.json`` were captured
+from the pre-refactor triplicated event loops (``core/sim.py`` before
+the ``repro.sim`` unification) and are the byte-identity contract the
+unified kernel is pinned against (``tests/test_sim_equivalence.py``).
+Re-running this script must therefore be a **no-op** on a healthy tree:
+``--check`` (also run by the CI ``sim-equivalence`` job) fails if the
+current simulator drifts from the frozen streams.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT / "tests"))
+
+import _sim_golden_cases as gc  # noqa: E402
+from repro.core.sim import simulate  # noqa: E402
+
+FIXTURE_PATH = ROOT / "tests" / "fixtures" / gc.FIXTURE_NAME
+
+
+def capture() -> dict:
+    entries = []
+    for case in gc.cases():
+        r = simulate(gc.build_config(case))
+        entries.append({"case": case, "result": gc.encode_result(r)})
+    return {"version": gc.FIXTURE_VERSION, "cases": entries}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="verify the committed fixtures instead of writing")
+    args = ap.parse_args()
+    data = capture()
+    text = json.dumps(data, sort_keys=True, indent=1)
+    if args.check:
+        committed = json.loads(FIXTURE_PATH.read_text())
+        fresh = json.loads(text)
+        if committed != fresh:
+            keys = [e["case"]["key"] for e in fresh["cases"]]
+            bad = [k for k, a, b in zip(keys, committed["cases"],
+                                        fresh["cases"]) if a != b]
+            print(f"DRIFT in {len(bad)} golden case(s): {bad}")
+            return 1
+        print(f"{len(data['cases'])} golden cases match {FIXTURE_PATH}")
+        return 0
+    FIXTURE_PATH.parent.mkdir(parents=True, exist_ok=True)
+    FIXTURE_PATH.write_text(text + "\n")
+    print(f"wrote {len(data['cases'])} cases -> {FIXTURE_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,8 +8,8 @@ Layers:
   sim            -- discrete-event simulator (paper Fig. 4/5 reproduction)
 
 Consumers should go through the ``repro.dls`` session facade (DESIGN.md);
-this package is the implementation layer.  ``run_threaded_*`` remain here
-only as deprecation shims over ``repro.dls``.
+this package is the implementation layer.  The DES event kernel behind
+``sim`` lives in ``repro.sim`` (one kernel, three runtime topologies).
 """
 from .chunk_calculus import (  # noqa: F401
     ADAPTIVE,
@@ -43,8 +43,6 @@ from .scheduler import (  # noqa: F401
     HierarchicalRuntime,
     OneSidedRuntime,
     TwoSidedRuntime,
-    run_threaded_one_sided,
-    run_threaded_two_sided,
 )
 from .sim import (  # noqa: F401
     KNL_SPEED,
@@ -56,6 +54,7 @@ from .sim import (  # noqa: F401
     paper_cluster,
     psia_costs,
     simulate,
+    simulate_many,
 )
 from .weights import (  # noqa: F401
     AdaptiveFactoringModel,

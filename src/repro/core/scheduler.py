@@ -21,13 +21,13 @@ the super-chunk through a cheap node-local window with an inner technique
 Both implement the ``repro.dls`` Runtime contract -- ``claim(pe, weight=)``,
 ``remaining_lower_bound()``, ``drained()``, ``state()``/``restore()`` -- so
 the ``DLSession`` facade can drive either interchangeably (see DESIGN.md).
-Prefer constructing them through ``repro.dls.loop(...)``; the threaded
-``run_threaded_*`` helpers below are deprecated shims over
-``DLSession.execute(..., executor="threads")``.
+Construct them through ``repro.dls.loop(...)``; the ``run_threaded_*``
+shims that once lived here (deprecated since PR 1) were removed in ISSUE 5
+-- use ``dls.loop(...).execute(work_fn, executor="threads")``.
 
 Both run over real threads (in-process "PEs") or over hosts (KVStoreWindow);
-the discrete-event simulator in ``sim.py`` has its own clocked versions of
-both protocols for the paper's heterogeneous-cluster experiments.
+the clocked versions of all three protocols live in the ``repro.sim``
+event kernel for the paper's heterogeneous-cluster experiments.
 """
 from __future__ import annotations
 
@@ -36,9 +36,8 @@ import itertools
 import queue
 import threading
 import time
-import warnings
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
 from . import chunk_calculus as cc
 from .rma import HierarchicalWindow, ThreadWindow, Window
@@ -501,54 +500,3 @@ class TwoSidedRuntime:
         return True
 
 
-# ---------------------------------------------------------------------------
-# Deprecated threaded helpers -- thin shims over the repro.dls facade.
-# ---------------------------------------------------------------------------
-
-
-def run_threaded_one_sided(
-    spec: cc.LoopSpec,
-    work_fn: Callable[[int, int], None],
-    n_threads: Optional[int] = None,
-    window: Optional[Window] = None,
-    weight_fn: Optional[Callable[[int], float]] = None,
-) -> List[Claim]:
-    """Deprecated: use ``repro.dls.loop(...).execute(..., executor="threads")``.
-
-    Execute a real loop with the one-sided protocol over threads.
-    ``work_fn(start, stop)`` executes iterations [start, stop).  Returns all
-    claims (the partition of [0, N)).  ``weight_fn(pe)`` supplies live AWF
-    weights.
-    """
-    warnings.warn(
-        "run_threaded_one_sided is deprecated; use "
-        "repro.dls.loop(...).execute(work_fn, executor='threads')",
-        DeprecationWarning, stacklevel=2)
-    from repro.dls import CallableWeights, DLSession
-
-    session = DLSession(
-        spec, OneSidedRuntime(spec, window),
-        weights=CallableWeights(weight_fn) if weight_fn is not None else None)
-    return session.execute(work_fn, executor="threads", n_threads=n_threads).claims
-
-
-def run_threaded_two_sided(
-    spec: cc.LoopSpec,
-    work_fn: Callable[[int, int], None],
-    n_threads: Optional[int] = None,
-    master_pe: int = 0,
-) -> List[Claim]:
-    """Deprecated: use ``repro.dls.loop(..., runtime="two_sided").execute(...)``.
-
-    Master-worker execution: PE ``master_pe`` is the non-dedicated master.
-    """
-    warnings.warn(
-        "run_threaded_two_sided is deprecated; use "
-        "repro.dls.loop(..., runtime='two_sided').execute(work_fn, executor='threads')",
-        DeprecationWarning, stacklevel=2)
-    from repro.dls import DLSession
-
-    session = DLSession(spec, TwoSidedRuntime(spec))
-    return session.execute(
-        work_fn, executor="threads", n_threads=n_threads, master_pe=master_pe
-    ).claims

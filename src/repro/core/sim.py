@@ -1,10 +1,12 @@
-"""Discrete-event simulator of DLS on heterogeneous distributed-memory clusters.
+"""Discrete-event simulation of DLS on heterogeneous distributed-memory
+clusters -- the stable public API.
 
 This is the faithful-reproduction engine for the paper's experiments
 (Sec. 4-5): it executes the One_Sided (distributed chunk-calculation via
-passive-target RMA) and Two_Sided (master-worker) protocols over a virtual
-cluster of heterogeneous PEs and reports the parallel loop time
-``T_p^loop``, per-PE finish times, and load-imbalance metrics.
+passive-target RMA), Two_Sided (master-worker), and Hierarchical
+(two-level MPI+MPI) protocols over a virtual cluster of heterogeneous
+PEs and reports the parallel loop time ``T_p^loop``, per-PE finish
+times, and load-imbalance metrics.
 
 Fidelity notes (matching the paper's observations):
 
@@ -18,8 +20,7 @@ Fidelity notes (matching the paper's observations):
 * Two_Sided claims queue at the master, which serves them **smallest rank
   first** (Intel MPI ``MPI_Iprobe`` behaviour per the paper) and whose
   service time scales with the *master's* core speed; the master is
-  non-dedicated -- it interleaves serving with executing its own iterations
-  (checks the queue every ``breakafter`` own iterations).
+  non-dedicated -- it interleaves serving with executing its own iterations.
 * Hierarchical claims (the follow-up paper's MPI+MPI two-level scheme)
   split into rare super-chunk claims through the global window
   (``o_rma_global``) and frequent local claims through per-node
@@ -29,15 +30,20 @@ Fidelity notes (matching the paper's observations):
 The DES has no wall-clock dependence; it is deterministic given a seed.
 Overhead constants are calibrated against the paper's published numbers
 -- derivations in EXPERIMENTS.md ("DES calibration").
+
+Since ISSUE 5 the three protocol implementations are **topology
+descriptions over one event kernel** (``repro.sim``: ``EventQueue``,
+``Resource`` serialization points, a shared PE process model, the
+perturbation scenario layer, and ``simulate_many`` batched sweeps).
+This module keeps the stable surface -- ``SimConfig``, ``SimResult``,
+``simulate`` -- plus the paper's cluster/workload calibration helpers;
+non-adaptive event streams are pinned byte-identical to the
+pre-refactor implementations by ``tests/test_sim_equivalence.py``.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-import math
-import random
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -102,6 +108,13 @@ class SimConfig:
     # of the ``repro.replay`` data plane (EXPERIMENTS.md Sec. 4).  Off by
     # default: paper-scale grids take millions of chunks.
     collect_trace: bool = False
+    # Scenario layer (``repro.sim.perturb``): a sequence of ``Perturbation``
+    # objects -- PE failure/churn with in-flight chunk re-claim, straggler
+    # injection, time-varying speed drift -- applied by the shared event
+    # kernel, so every topology supports every scenario.  None (default)
+    # compiles to nothing: event streams stay byte-identical to the
+    # unperturbed simulator.
+    perturbations: Optional[Sequence] = None
 
     def __post_init__(self):
         self.speeds = np.asarray(self.speeds, dtype=np.float64)
@@ -114,6 +127,8 @@ class SimConfig:
             self.o_rma_global = self.o_rma
         if self.impl == "hierarchical" and not 1 <= self.nodes <= self.spec.P:
             raise ValueError(f"nodes must be in [1, P], got {self.nodes}")
+        if self.perturbations is not None:
+            self.perturbations = tuple(self.perturbations)
 
 
 @dataclass
@@ -140,668 +155,21 @@ class SimResult:
         )
 
 
-# ---------------------------------------------------------------------------
-# Adaptive-technique telemetry (af / awf_b..e): the DES drives the *same*
-# weight models the runtime policies use (core/weights.py), feeding them
-# noise-perturbed, lag-delayed observations on the virtual clock -- so
-# simulated and real adaptation can never use different math.
-# ---------------------------------------------------------------------------
-
-
-def _make_adaptive_model(technique: str, P: int):
-    from .weights import AdaptiveFactoringModel, AdaptiveWeightModel
-
-    if technique == "af":
-        return AdaptiveFactoringModel(P)
-    update, overhead = cc.AWF_VARIANTS[technique]
-    return AdaptiveWeightModel(P, update=update, include_overhead=overhead)
-
-
-class _AdaptiveTelemetry:
-    """Noise + adaptation-lag front end over an adaptive weight model.
-
-    ``observe`` queues a completed chunk's measurement (compute time
-    perturbed by lognormal noise with c.o.v. ``o_meas_cov``); ``deliver``
-    feeds the model every observation that has become visible by ``now``
-    (completion + ``o_adapt_lag``) -- the DES analogue of telemetry RMWs
-    propagating through the window before claimers can read them.
-    """
-
-    def __init__(self, model, cov: float, lag: float, rng: random.Random):
-        self.model = model
-        self.lag = lag
-        self.rng = rng
-        self.sig = math.sqrt(math.log(1.0 + cov * cov)) if cov > 0 else 0.0
-        self._heap: List[tuple] = []
-        self._seq = itertools.count()
-
-    def observe(self, pe: int, iters: int, exec_t: float, sched_t: float,
-                t_done: float) -> None:
-        if iters <= 0:
-            return
-        sec = exec_t
-        if self.sig:
-            sec *= self.rng.lognormvariate(-0.5 * self.sig * self.sig, self.sig)
-        heapq.heappush(self._heap,
-                       (t_done + self.lag, next(self._seq), pe, iters, sec,
-                        sched_t))
-
-    def deliver(self, now: float) -> None:
-        while self._heap and self._heap[0][0] <= now:
-            _, _, pe, iters, sec, sched = heapq.heappop(self._heap)
-            self.model.record(pe, iters, sec, sched)
-
-    # -- claim-time lookups -------------------------------------------------
-    def weight(self, pe: int) -> Optional[float]:
-        return self.model.weight(pe)
-
-    def af_stats(self, pe: int):
-        fn = getattr(self.model, "af_stats", None)
-        return fn(pe) if fn is not None else None
-
-    def node_weight(self, node: int, bounds) -> Optional[float]:
-        return self.model.node_weight(node, bounds)
-
-
-def _telemetry_for(cf: SimConfig, rng: random.Random,
-                   inner: Optional[str] = None,
-                   lag: Optional[float] = None) -> Optional[_AdaptiveTelemetry]:
-    """A telemetry front end if any scheduling level is adaptive, else None.
-
-    When both levels are adaptive the *inner* (per-PE claim) technique
-    picks the model -- claims are per-PE; the outer level only consumes the
-    node-aggregated weights, which every model exposes.  ``lag`` overrides
-    ``o_adapt_lag`` (the two-sided DES passes 0: telemetry is master-local,
-    no window traversal to wait for).
-    """
-    names = [t for t in (inner, cf.spec.technique) if t in cc.ADAPTIVE]
-    if not names:
-        return None
-    return _AdaptiveTelemetry(_make_adaptive_model(names[0], cf.spec.P),
-                              cf.o_meas_cov,
-                              cf.o_adapt_lag if lag is None else lag, rng)
-
-
-# ---------------------------------------------------------------------------
-# One_Sided DES
-# ---------------------------------------------------------------------------
-
-
-def _simulate_one_sided(cf: SimConfig) -> SimResult:
-    spec, N = cf.spec, cf.spec.N
-    P = spec.P
-    rng = random.Random(cf.seed)
-    pref = np.concatenate([[0.0], np.cumsum(cf.costs)])  # prefix sums of cost
-    tele = _telemetry_for(cf, rng)
-
-    # Window state (the two shared integers of the paper)
-    glob_i = 0
-    glob_lp = 0
-    win_busy_until = 0.0
-    waiters: List[tuple] = []  # (pe, phase, ready_time, k) waiting for the window
-
-    # Event heap: (time, seq, kind, pe, payload)
-    seq = itertools.count()
-    evq: List[tuple] = []
-
-    finish = np.zeros(P)
-    iters = np.zeros(P, dtype=np.int64)
-    claim_started = {}
-    claim_latencies = []
-    n_claims = 0
-    n_rmw = 0
-    trace = [] if cf.collect_trace else None
-
-    def push(t, kind, pe, payload=None):
-        heapq.heappush(evq, (t, next(seq), kind, pe, payload))
-
-    def window_grant(now):
-        """If the window is free and someone waits, grant one RMW."""
-        nonlocal win_busy_until, n_rmw
-        if not waiters or win_busy_until > now + 1e-18:
-            return
-        idx = rng.randrange(len(waiters)) if cf.lock_polling_random else 0
-        pe, phase, ready, k = waiters.pop(idx)
-        win_busy_until = now + cf.o_rma
-        n_rmw += 1
-        push(now + cf.o_rma, f"rmw{phase}_done", pe, k)
-        push(now + cf.o_rma, "win_free", -1)
-
-    # All PEs start by claiming at t=0 (paying their issue cost first)
-    for pe in range(P):
-        push(cf.o_issue / cf.speeds[pe], "want_rmw1", pe)
-
-    done_pes = 0
-    while evq and done_pes < P:
-        t, _, kind, pe, payload = heapq.heappop(evq)
-        if kind == "want_rmw1":
-            if glob_lp >= N:  # fast-path exit (stale-read safe: re-checked later)
-                finish[pe] = t
-                done_pes += 1
-                continue
-            claim_started[pe] = t
-            waiters.append((pe, 1, t, None))
-            window_grant(t)  # grants only if the window is free *now*;
-            # otherwise the pending win_free event picks a (random) waiter --
-            # this is what models Lock-Polling fairness correctly.
-        elif kind == "rmw1_done":
-            i_local = glob_i
-            glob_i += 1
-            # Step 2: local closed-form chunk calculation (overlaps other PEs)
-            if tele is None:
-                k = cc.chunk_size_closed(spec, i_local, pe)
-            else:
-                tele.deliver(t)
-                k = cc.chunk_size_closed(
-                    spec, i_local, pe, weight=tele.weight(pe),
-                    af_stats=tele.af_stats(pe), remaining=N - glob_lp)
-            t_ready = t + cf.o_claim_net + cf.t_calc / cf.speeds[pe]
-            push(t_ready, "want_rmw2", pe, k)
-        elif kind == "want_rmw2":
-            waiters.append((pe, 2, t, payload))
-            window_grant(t)
-        elif kind == "rmw2_done":
-            k = payload
-            start = glob_lp
-            glob_lp += k
-            t_got = t + cf.o_claim_net
-            lat = t_got - claim_started.pop(pe)
-            claim_latencies.append(lat)
-            if start >= N:
-                finish[pe] = t_got
-                done_pes += 1
-                continue
-            n_claims += 1
-            stop = min(start + k, N)
-            iters[pe] += stop - start
-            exec_t = (pref[stop] - pref[start]) / cf.speeds[pe]
-            if trace is not None:
-                trace.append({"pe": pe, "step": n_claims - 1, "start": start,
-                              "size": stop - start, "t0": t_got,
-                              "t1": t_got + exec_t, "lat": lat})
-            if tele is not None:
-                tele.observe(pe, stop - start, exec_t, lat, t_got + exec_t)
-            push(t_got + exec_t + cf.o_issue / cf.speeds[pe], "want_rmw1", pe)
-        elif kind == "win_free":
-            window_grant(t)
-        else:  # pragma: no cover
-            raise AssertionError(kind)
-
-    cov = float(np.std(finish) / np.mean(finish)) if np.mean(finish) > 0 else 0.0
-    return SimResult(
-        T_loop=float(finish.max()),
-        finish=finish,
-        n_claims=n_claims,
-        cov=cov,
-        per_pe_iters=iters,
-        mean_claim_latency=float(np.mean(claim_latencies)) if claim_latencies else 0.0,
-        n_rmw_global=n_rmw,
-        chunk_trace=trace,
-    )
-
-
-# ---------------------------------------------------------------------------
-# Hierarchical DES (two-level: global super-chunks + node-local windows)
-# ---------------------------------------------------------------------------
-
-
-def _simulate_hierarchical(cf: SimConfig) -> SimResult:
-    """Two-level DLS over a virtual cluster (arXiv:1903.09510's scheme).
-
-    Outer level: nodes claim super-chunks through the global window
-    (``spec.technique`` over P=nodes, two RMWs at ``o_rma_global`` each,
-    Lock-Polling fairness as in the flat sim).  Inner level: each node's
-    PEs sub-schedule the live super-chunk through the node's shared-memory
-    window (``inner_technique`` over the node's PEs, two RMWs at
-    ``o_rma_local`` each, serialized *per node* so nodes overlap).  One PE
-    per node refills at a time; node mates arriving mid-refill park until
-    the super-chunk is published -- the DES analogue of the runtime's
-    election protocol.
-    """
-    spec, N = cf.spec, cf.spec.N
-    P, nodes = spec.P, cf.nodes
-    rng = random.Random(cf.seed)
-    pref = np.concatenate([[0.0], np.cumsum(cf.costs)])
-    tele = _telemetry_for(cf, rng, inner=cf.inner_technique)
-
-    # Topology + level specs come from the same helpers HierarchicalRuntime
-    # uses, so the simulated schedule cannot drift from the real one.
-    bounds, n_pes = cc.node_blocks(P, nodes)
-    node_of = np.searchsorted(np.array(bounds[1:]), np.arange(P), side="right")
-    outer = cc.hierarchical_outer_spec(spec, nodes)
-    inner_specs = {}
-
-    def inner_spec(node, size):
-        key = (node, size)
-        if key not in inner_specs:
-            inner_specs[key] = cc.hierarchical_inner_spec(
-                spec, cf.inner_technique, bounds, node, size)
-        return inner_specs[key]
-
-    # Global window state (outer level)
-    glob_i = 0
-    glob_lp = 0
-    g_busy_until = 0.0
-    g_waiters: List[tuple] = []  # (pe, phase, payload)
-
-    # Per-node state (inner level)
-    l_busy = [0.0] * nodes
-    l_waiters: List[List[tuple]] = [[] for _ in range(nodes)]
-    sc: List[Optional[dict]] = [None] * nodes  # live super-chunk per node
-    refilling = [False] * nodes
-    parked: List[List[int]] = [[] for _ in range(nodes)]
-    node_done = [False] * nodes
-
-    seq = itertools.count()
-    evq: List[tuple] = []
-
-    finish = np.zeros(P)
-    iters = np.zeros(P, dtype=np.int64)
-    claim_started = {}
-    claim_latencies = []
-    n_claims = 0
-    n_rmw_global = 0
-    n_rmw_local = 0
-    done_pes = 0
-    trace = [] if cf.collect_trace else None
-
-    def push(t, kind, pe, payload=None):
-        heapq.heappush(evq, (t, next(seq), kind, pe, payload))
-
-    def g_grant(now):
-        nonlocal g_busy_until, n_rmw_global
-        if not g_waiters or g_busy_until > now + 1e-18:
-            return
-        idx = rng.randrange(len(g_waiters)) if cf.lock_polling_random else 0
-        pe, phase, payload = g_waiters.pop(idx)
-        g_busy_until = now + cf.o_rma_global
-        n_rmw_global += 1
-        push(now + cf.o_rma_global, f"g{phase}_done", pe, payload)
-        push(now + cf.o_rma_global, "g_free", -1)
-
-    def l_grant(node, now):
-        nonlocal n_rmw_local
-        if not l_waiters[node] or l_busy[node] > now + 1e-18:
-            return
-        idx = rng.randrange(len(l_waiters[node])) if cf.lock_polling_random else 0
-        pe, phase, payload = l_waiters[node].pop(idx)
-        l_busy[node] = now + cf.o_rma_local
-        n_rmw_local += 1
-        push(now + cf.o_rma_local, f"l{phase}_done", pe, payload)
-        push(now + cf.o_rma_local, "l_free", -1, node)
-
-    def pe_finish(pe, t):
-        nonlocal done_pes
-        finish[pe] = t
-        claim_started.pop(pe, None)
-        done_pes += 1
-
-    def start_refill(pe, node, t):
-        """This PE refills; node mates park until the super-chunk lands."""
-        if node_done[node]:
-            pe_finish(pe, t)
-            return
-        if refilling[node]:
-            parked[node].append(pe)
-            return
-        if glob_lp >= N:  # fast path: drained, no RMWs burned
-            drain_node(node, t)
-            pe_finish(pe, t)
-            return
-        refilling[node] = True
-        push(t + cf.o_issue / cf.speeds[pe], "want_g1", pe)
-
-    def drain_node(node, t):
-        node_done[node] = True
-        refilling[node] = False
-        for q in parked[node]:
-            pe_finish(q, t)
-        parked[node].clear()
-
-    def want_local(pe, t):
-        node = node_of[pe]
-        if node_done[node]:
-            pe_finish(pe, t)
-            return
-        if sc[node] is None:
-            start_refill(pe, node, t)
-            return
-        claim_started.setdefault(pe, t)
-        l_waiters[node].append((pe, 1, sc[node]))
-        l_grant(node, t)
-
-    for pe in range(P):
-        push(cf.o_issue_local / cf.speeds[pe], "want_l1", pe)
-
-    while evq and done_pes < P:
-        t, _, kind, pe, payload = heapq.heappop(evq)
-        node = node_of[pe] if pe >= 0 else -1
-        if kind == "want_l1":
-            want_local(pe, t)
-        elif kind == "l1_done":
-            s = payload  # the super-chunk this PE claimed against
-            i_l = s["i"]
-            s["i"] += 1
-            if tele is None or cf.inner_technique not in cc.ADAPTIVE:
-                k = cc.chunk_size_closed(
-                    inner_spec(s["node"], s["size"]), i_l, pe - bounds[node])
-            else:
-                tele.deliver(t)
-                k = cc.chunk_size_closed(
-                    inner_spec(s["node"], s["size"]), i_l, pe - bounds[node],
-                    weight=tele.weight(pe), af_stats=tele.af_stats(pe),
-                    remaining=s["size"] - s["lp"])
-            push(t + cf.t_calc / cf.speeds[pe], "want_l2", pe, (s, k))
-        elif kind == "want_l2":
-            l_waiters[node].append((pe, 2, payload))
-            l_grant(node, t)
-        elif kind == "l2_done":
-            s, k = payload
-            off = s["lp"]
-            s["lp"] += k
-            if off >= s["size"]:
-                # epoch exhausted (or stale): first discoverer clears it
-                if sc[node] is s:
-                    sc[node] = None
-                want_local(pe, t)
-                continue
-            lat = t - claim_started.pop(pe)
-            claim_latencies.append(lat)
-            n_claims += 1
-            a = s["start"] + off
-            b = s["start"] + min(off + k, s["size"])
-            iters[pe] += b - a
-            exec_t = (pref[b] - pref[a]) / cf.speeds[pe]
-            if trace is not None:
-                trace.append({"pe": pe, "step": n_claims - 1, "start": a,
-                              "size": b - a, "t0": t, "t1": t + exec_t,
-                              "lat": lat})
-            if tele is not None:
-                tele.observe(pe, b - a, exec_t, lat, t + exec_t)
-            push(t + exec_t + cf.o_issue_local / cf.speeds[pe], "want_l1", pe)
-        elif kind == "want_g1":
-            claim_started.setdefault(pe, t)
-            g_waiters.append((pe, 1, None))
-            g_grant(t)
-        elif kind == "g1_done":
-            i_g = glob_i
-            glob_i += 1
-            # Weighted outer techniques consume telemetry aggregated to node
-            # level (PerfModel.node_weights) -- an adaptive *outer* AF has
-            # no node-level (mu, sigma), so it rides its FAC2 bootstrap.
-            nw = None
-            if tele is not None and spec.technique in cc.WEIGHTED:
-                tele.deliver(t)
-                nw = tele.node_weight(node, bounds)
-            K = cc.chunk_size_closed(outer, i_g, node, weight=nw)
-            push(t + cf.o_claim_net + cf.t_calc / cf.speeds[pe],
-                 "want_g2", pe, K)
-        elif kind == "want_g2":
-            g_waiters.append((pe, 2, payload))
-            g_grant(t)
-        elif kind == "g2_done":
-            K = payload
-            start = glob_lp
-            glob_lp += K
-            t_got = t + cf.o_claim_net
-            if start >= N:
-                drain_node(node, t_got)
-                pe_finish(pe, t_got)
-                continue
-            sc[node] = {"node": node, "start": start,
-                        "size": min(K, N - start), "i": 0, "lp": 0}
-            refilling[node] = False
-            woken = [pe] + parked[node]
-            parked[node].clear()
-            for q in woken:
-                push(t_got, "want_l1", q)
-        elif kind == "g_free":
-            g_grant(t)
-        elif kind == "l_free":
-            l_grant(payload, t)
-        else:  # pragma: no cover
-            raise AssertionError(kind)
-
-    cov = float(np.std(finish) / np.mean(finish)) if np.mean(finish) > 0 else 0.0
-    return SimResult(
-        T_loop=float(finish.max()),
-        finish=finish,
-        n_claims=n_claims,
-        cov=cov,
-        per_pe_iters=iters,
-        mean_claim_latency=float(np.mean(claim_latencies)) if claim_latencies else 0.0,
-        n_rmw_global=n_rmw_global,
-        n_rmw_local=n_rmw_local,
-        chunk_trace=trace,
-    )
-
-
-# ---------------------------------------------------------------------------
-# Two_Sided DES (master-worker)
-# ---------------------------------------------------------------------------
-
-
-def _simulate_two_sided(cf: SimConfig) -> SimResult:
-    spec, N = cf.spec, cf.spec.N
-    P = spec.P
-    m = cf.coordinator
-    s_m = cf.speeds[m]
-    pref = np.concatenate([[0.0], np.cumsum(cf.costs)])
-    # Adaptive techniques only: telemetry lives master-side (the master
-    # already serializes claims), so measurements apply at the next serve
-    # with noise but no extra visibility lag.
-    tele = _telemetry_for(cf, random.Random(cf.seed), lag=0.0)
-
-    # Master-side recurrence state (Table 2)
-    R = N
-    i_step = 0
-    k_tss: Optional[int] = None
-    batch_base: Optional[int] = None
-    K0, Klast, S, C = cc.tss_constants(N, P, spec.min_chunk)
-
-    def next_chunk(pe, now=0.0):
-        nonlocal R, i_step, k_tss, batch_base
-        if R <= 0:
-            return None
-        if tele is not None:
-            tele.deliver(now)
-        t_, Pn = spec.technique, spec.P
-        if t_ == "static":
-            k = int(math.ceil(N / Pn))
-        elif t_ == "ss":
-            k = spec.min_chunk
-        elif t_ == "gss":
-            k = max(int(math.ceil(R / Pn)), spec.min_chunk)
-        elif t_ == "tss":
-            k_tss = K0 if k_tss is None else max(k_tss - C, Klast)
-            k = k_tss
-        elif t_ in cc.FAC_FAMILY:
-            # batch bookkeeping advances on every claim of the family, so a
-            # telemetry-less bootstrap claim never reads a stale/None base
-            if i_step % Pn == 0:
-                batch_base = max(int(math.ceil(R / (2.0 * Pn))), spec.min_chunk)
-            stats = tele.af_stats(pe) if t_ == "af" and tele is not None \
-                else None
-            if stats is not None:
-                k = cc.af_chunk_size(stats, R, spec.min_chunk)
-            else:  # includes AF's telemetry-less bootstrap
-                k = batch_base
-                if t_ in cc.WEIGHTED:
-                    w = tele.weight(pe) if tele is not None else None
-                    if w is None:
-                        w = spec.weight(pe)
-                    k = max(int(math.ceil(w * batch_base)), spec.min_chunk)
-        elif t_ == "tfss":
-            if i_step % Pn == 0:
-                first = K0 - i_step * C
-                mean = first - (Pn - 1) / 2.0 * C
-                batch_base = max(int(math.ceil(mean)), Klast)
-            k = batch_base
-        else:
-            raise AssertionError(t_)
-        k = min(k, R)
-        start = N - R
-        R -= k
-        i_step += 1
-        return start, k
-
-    seq = itertools.count()
-    evq: List[tuple] = []
-
-    def push(t, kind, pe, payload=None):
-        heapq.heappush(evq, (t, next(seq), kind, pe, payload))
-
-    pending: List[tuple] = []  # (rank, arrive_time) -- served smallest rank first
-    finish = np.zeros(P)
-    iters = np.zeros(P, dtype=np.int64)
-    n_claims = 0
-    serve_time = 0.0
-    claim_started = {}
-    claim_latencies = []
-    trace = [] if cf.collect_trace else None
-
-    # Master's own work: a claimed chunk it burns down in time slices of
-    # ``master_quantum`` seconds, checking the queue in between (fine-grained
-    # MPI_Iprobe polling).  The first own-claim is deferred by the master's
-    # own issue cost, so at startup pending worker requests win.
-    master_chunk: Optional[list] = None  # [remaining_seconds, iters]
-    master_done_own = False
-    master_busy = False
-    workers_done = 0
-    # The master self-claims without MPI, so its first own chunk is taken at
-    # t=0, *before* any worker request can arrive -- with GSS this is what
-    # puts K_0 on the master core (and makes a slow master catastrophic,
-    # paper Fig. 4a).
-    master_may_claim_at = 0.0
-
-    def master_kick(now):
-        """Master picks its next action.  Called whenever it may be free."""
-        nonlocal master_busy, master_chunk, master_done_own, n_claims, serve_time
-        if master_busy:
-            return
-        # 1) serve pending requests first (smallest rank, per Intel MPI)
-        if pending:
-            pending.sort()
-            rank, t_arr = pending.pop(0)
-            dt = cf.o_serve / s_m
-            serve_time += dt
-            master_busy = True
-            res = next_chunk(rank, now)
-            push(now + dt, "serve_done", rank, res)
-            return
-        # 2) own work: burn one time quantum
-        if master_chunk is not None:
-            dt = min(cf.master_quantum, master_chunk[0])
-            master_chunk[0] -= dt
-            master_busy = True
-            push(now + dt, "master_slice_done", m, None)
-            return
-        if not master_done_own and now >= master_may_claim_at:
-            res = next_chunk(m, now)
-            if res is None:
-                master_done_own = True
-                finish[m] = max(finish[m], now)
-            else:
-                n_claims += 1
-                start, k = res
-                iters[m] += k
-                exec_t = (pref[start + k] - pref[start]) / s_m
-                # [remaining_s, iters, exec_s, start, step, t_claimed]
-                master_chunk = [exec_t, k, exec_t, start, n_claims - 1, now]
-                dt = cf.t_calc / s_m
-                master_busy = True
-                push(now + dt, "master_claimed", m, None)
-            return
-        if not master_done_own and now < master_may_claim_at:
-            # poll again once the issue window has passed
-            push(master_may_claim_at, "master_kick", m)
-        # 3) idle: wake on next request arrival (event-driven; nothing to do)
-
-    # workers request at t=0 (paying issue cost); master starts at t=0
-    for pe in range(P):
-        if pe == m:
-            continue
-        claim_started[pe] = 0.0
-        push(cf.o_issue / cf.speeds[pe] + cf.o_req_net / 2, "request_arrive", pe)
-    push(0.0, "master_kick", m)
-
-    n_workers = P - 1
-    while evq:
-        t, _, kind, pe, payload = heapq.heappop(evq)
-        if kind == "request_arrive":
-            pending.append((pe, t))
-            master_kick(t)
-        elif kind == "serve_done":
-            master_busy = False
-            res = payload
-            push(t + cf.o_req_net / 2, "reply_arrive", pe, res)
-            master_kick(t)
-        elif kind == "reply_arrive":
-            lat = t - claim_started.pop(pe)
-            claim_latencies.append(lat)
-            if payload is None:
-                finish[pe] = t
-                workers_done += 1
-                continue
-            nonlocal_start, k = payload
-            n_claims += 1
-            stop = nonlocal_start + k
-            iters[pe] += k
-            exec_t = (pref[stop] - pref[nonlocal_start]) / cf.speeds[pe]
-            if trace is not None:
-                trace.append({"pe": pe, "step": n_claims - 1,
-                              "start": nonlocal_start, "size": k, "t0": t,
-                              "t1": t + exec_t, "lat": lat})
-            if tele is not None:
-                tele.observe(pe, k, exec_t, lat, t + exec_t)
-            push(t + exec_t, "worker_done_chunk", pe)
-        elif kind == "worker_done_chunk":
-            claim_started[pe] = t
-            push(t + cf.o_issue / cf.speeds[pe] + cf.o_req_net / 2, "request_arrive", pe)
-        elif kind == "master_slice_done":
-            master_busy = False
-            if master_chunk[0] <= 1e-15:
-                if trace is not None:
-                    # t0 is claim time: master chunks interleave with serving,
-                    # so t1 - t0 >= exec_s (the serve slices are inside).
-                    trace.append({"pe": m, "step": master_chunk[4],
-                                  "start": master_chunk[3],
-                                  "size": master_chunk[1],
-                                  "t0": master_chunk[5], "t1": t, "lat": 0.0})
-                if tele is not None:
-                    tele.observe(m, master_chunk[1], master_chunk[2], 0.0, t)
-                master_chunk = None
-                finish[m] = t
-            master_kick(t)
-        elif kind == "master_claimed":
-            master_busy = False
-            master_kick(t)
-        elif kind == "master_kick":
-            master_kick(t)
-        else:  # pragma: no cover
-            raise AssertionError(kind)
-
-    cov = float(np.std(finish) / np.mean(finish)) if np.mean(finish) > 0 else 0.0
-    return SimResult(
-        T_loop=float(finish.max()),
-        finish=finish,
-        n_claims=n_claims,
-        cov=cov,
-        per_pe_iters=iters,
-        master_serve_time=serve_time,
-        mean_claim_latency=float(np.mean(claim_latencies)) if claim_latencies else 0.0,
-        chunk_trace=trace,
-    )
-
-
 def simulate(cf: SimConfig) -> SimResult:
-    if cf.impl == "one_sided":
-        return _simulate_one_sided(cf)
-    if cf.impl == "two_sided":
-        return _simulate_two_sided(cf)
-    if cf.impl == "hierarchical":
-        return _simulate_hierarchical(cf)
-    raise ValueError(f"unknown impl {cf.impl!r}")
+    """Run one configuration through the unified event kernel."""
+    from repro.sim.run import simulate as _simulate
+
+    return _simulate(cf)
+
+
+def simulate_many(configs: Sequence[SimConfig], workers=None,
+                  budget_s: Optional[float] = None) -> List[SimResult]:
+    """Batched sweep over many configurations (``repro.sim.batch``):
+    process-pool fan-out with fork-shared cost arrays; results align with
+    ``configs`` (None where a wall-clock budget dropped a candidate)."""
+    from repro.sim.batch import simulate_many as _many
+
+    return _many(configs, workers=workers, budget_s=budget_s)
 
 
 # ---------------------------------------------------------------------------

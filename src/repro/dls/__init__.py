@@ -18,8 +18,9 @@ Layers behind the facade (all swappable):
                   (DESIGN.md Sec. 8)
   Executor     -- serial | threads | sim
 
-``repro.core``'s ``run_threaded_*`` helpers remain as deprecation shims
-over this package.
+``repro.core``'s ``run_threaded_*`` helpers were deprecation shims
+over this package; they were removed in ISSUE 5 -- use
+``loop(...).execute(work_fn, executor="threads")``.
 """
 from repro.core.chunk_calculus import (  # noqa: F401  (re-exported surface)
     ADAPTIVE,

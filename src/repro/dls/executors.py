@@ -186,6 +186,8 @@ def _sim(session, costs=None, speeds=None, **sim_kw):
     DES and report per-level RMW counts.  ``collect_trace=True`` records
     the DES's per-chunk events into ``report.chunk_times`` (virtual-clock
     timestamps) so simulated runs are replayable like native ones.
+    ``perturbations=(...)`` forwards a ``repro.sim.perturb`` scenario
+    (PE failure/churn, stragglers, speed drift) into the kernel.
     """
     from repro.core.scheduler import HierarchicalRuntime
     from repro.core.sim import SimConfig, simulate

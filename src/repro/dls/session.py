@@ -359,6 +359,7 @@ def loop(
     trace=None,
     auto_seed: int = 0,
     auto_budget_s: Optional[float] = 2.0,
+    auto_workers=None,
 ) -> DLSession:
     """Open a DLS session over ``[0, N)`` -- the facade's front door.
 
@@ -385,12 +386,14 @@ def loop(
         scheduling domains, and the technique used *within* a node
         (defaults to SS; ``technique`` becomes the outer, super-chunk-level
         technique).  Rejected for flat runtimes.
-    costs / speeds / trace / auto_seed / auto_budget_s: selection inputs,
-        consumed only by ``technique="auto"`` -- a per-iteration cost hint
-        (any length; resampled), a per-PE speed hint, a recorded
-        ``repro.replay`` Trace (or path) to calibrate the sweep from, the
-        sweep's DES seed, and its wall-clock budget in seconds (None =
-        unbounded).  See DESIGN.md Sec. 9.
+    costs / speeds / trace / auto_seed / auto_budget_s / auto_workers:
+        selection inputs, consumed only by ``technique="auto"`` -- a
+        per-iteration cost hint (any length; resampled), a per-PE speed
+        hint, a recorded ``repro.replay`` Trace (or path) to calibrate
+        the sweep from, the sweep's DES seed, its wall-clock budget in
+        seconds (None = unbounded), and the ``simulate_many`` worker
+        knob for the candidate sweep (None = adaptive process fan-out).
+        See DESIGN.md Sec. 9-10.
     """
     auto_decision = None
     if technique == "auto":
@@ -400,7 +403,7 @@ def loop(
             N=N, P=P, runtime=runtime, nodes=nodes,
             inner_technique=inner_technique, costs=costs, speeds=speeds,
             trace=trace, min_chunk=min_chunk, max_chunk=max_chunk,
-            seed=auto_seed, budget_s=auto_budget_s)
+            seed=auto_seed, budget_s=auto_budget_s, workers=auto_workers)
         technique = auto_decision["chosen"]
     elif costs is not None or speeds is not None or trace is not None:
         warnings.warn(

@@ -2,4 +2,8 @@ import sys
 
 from .cli import main
 
-sys.exit(main())
+# The __name__ guard matters: spawn-based multiprocessing workers
+# (repro.sim.batch on multithreaded parents) re-import the parent's main
+# module, and an unguarded sys.exit(main()) would re-run the CLI there.
+if __name__ == "__main__":
+    sys.exit(main())

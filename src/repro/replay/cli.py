@@ -31,6 +31,17 @@ from .predict import predict, ranking_table
 from .trace import Trace, TraceStore, load_trace
 
 
+def _workers_arg(value: str):
+    """--workers: an int or the literal 'auto' (rejected at parse time)."""
+    if value == "auto":
+        return value
+    try:
+        return int(value)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected an integer or 'auto', got {value!r}") from None
+
+
 def _record(args) -> int:
     rng = np.random.default_rng(args.seed)
     sigma = np.sqrt(np.log(1.0 + args.cost_cov ** 2))
@@ -79,7 +90,7 @@ def _predict(args) -> int:
     runtimes = args.runtimes.split(",") if args.runtimes else None
     res = predict(load_trace(args.trace), runtimes=runtimes,
                   seed=args.seed, budget_s=args.budget,
-                  max_sim_iters=args.max_sim_iters)
+                  max_sim_iters=args.max_sim_iters, workers=args.workers)
     calib = res["calibration"]
     print(calib.summary())
     print(f"replay percent error: {res['percent_error']:.2f}%")
@@ -133,6 +144,9 @@ def build_parser() -> argparse.ArgumentParser:
     q.add_argument("--budget", type=float, default=None,
                    help="sweep wall-clock budget [s] (default unbounded)")
     q.add_argument("--max-sim-iters", type=int, default=None)
+    q.add_argument("--workers", type=_workers_arg, default=None,
+                   help="sweep fan-out: an int, 'auto' (all cores), or "
+                        "unset for the adaptive default (simulate_many)")
     q.set_defaults(fn=_predict)
 
     g = sub.add_parser("gantt", help="render a trace (ASCII and/or SVG)")

@@ -6,10 +6,13 @@ overheads), sweep candidate (technique, runtime) configurations through
 selection use-case of arXiv:1804.11115 driven by the reproduction
 machinery of arXiv:1805.07998.
 
-The sweep is seeded (deterministic for a fixed calibration + seed) and
-optionally wall-clock bounded: candidates are evaluated in roster order
-and the sweep stops adding once the budget is spent (at least one
-candidate is always evaluated).  For very long loops the empirical
+The sweep is seeded (deterministic for a fixed calibration + seed,
+regardless of worker count) and runs through ``repro.sim.simulate_many``:
+big rosters fan out over a process pool with fork-shared cost arrays
+instead of the old roster-order serial loop, while small selection
+sweeps stay in-process (adaptive ``workers=None`` default).  An optional
+wall-clock budget keeps every candidate that finished in time -- at
+least one is always evaluated.  For very long loops the empirical
 workload can be subsampled (``max_sim_iters``) -- predicted times then
 rank configurations rather than reproduce absolute magnitudes; `scale`
 on each prediction records the subsampling factor.
@@ -17,12 +20,12 @@ on each prediction records the subsampling factor.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.chunk_calculus import TECHNIQUES
+from repro.sim import simulate_many
 
 from .calibrate import Calibration, calibrate
 from .trace import load_trace
@@ -72,12 +75,17 @@ def sweep(
     max_sim_iters: Optional[int] = None,
     min_chunk: Optional[int] = None,  # None = the calibration's bounds
     max_chunk: Optional[int] = ...,
+    workers=None,
 ) -> List[Prediction]:
     """Simulate every candidate; return predictions sorted by ``T_loop``.
 
-    ``budget_s`` bounds the sweep's own wall time (roster order, >= 1
-    candidate always evaluated); ``max_sim_iters`` caps the number of
-    simulated iterations per candidate via strided subsampling.
+    The whole roster goes through ``simulate_many`` (one seeded DES per
+    candidate, so rankings are identical at any worker count).
+    ``budget_s`` bounds the sweep's wall time -- candidates that did not
+    finish in time are dropped, >= 1 is always evaluated;
+    ``max_sim_iters`` caps the simulated iterations per candidate via
+    strided subsampling; ``workers`` is ``simulate_many``'s knob
+    (None = adaptive, "auto" = all cores, <=1 = serial).
     """
     techniques = tuple(techniques) if techniques else TECHNIQUES
     runtimes = tuple(runtimes) if runtimes else (calib.runtime,)
@@ -86,18 +94,15 @@ def sweep(
     if max_sim_iters is not None and len(costs) > max_sim_iters:
         costs = subsample_costs(costs, max_sim_iters)
         scale = len(costs) / calib.N
-    deadline = None if budget_s is None else time.monotonic() + budget_s
     candidates = [(rt, tech) for rt in runtimes for tech in techniques]
-    out: List[Prediction] = []
-    for rt, tech in candidates:
-        if out and deadline is not None and time.monotonic() > deadline:
-            break  # budget spent: keep what's already evaluated
-        r = calib.simulate(technique=tech, runtime=rt, seed=seed,
-                           costs=costs, min_chunk=min_chunk,
-                           max_chunk=max_chunk)
-        out.append(Prediction(technique=tech, runtime=rt,
-                              T_loop=float(r.T_loop), cov=float(r.cov),
-                              steps=int(r.n_claims), scale=scale))
+    configs = [calib.sim_config(technique=tech, runtime=rt, seed=seed,
+                                costs=costs, min_chunk=min_chunk,
+                                max_chunk=max_chunk)
+               for rt, tech in candidates]
+    results = simulate_many(configs, workers=workers, budget_s=budget_s)
+    out = [Prediction(technique=tech, runtime=rt, T_loop=float(r.T_loop),
+                      cov=float(r.cov), steps=int(r.n_claims), scale=scale)
+           for (rt, tech), r in zip(candidates, results) if r is not None]
     out.sort(key=lambda p: (p.T_loop, p.technique, p.runtime))
     return out
 
@@ -110,6 +115,7 @@ def predict(
     seed: int = 0,
     budget_s: Optional[float] = None,
     max_sim_iters: Optional[int] = None,
+    workers=None,
 ) -> dict:
     """Calibrate a trace, sweep candidates, and report the ranking.
 
@@ -122,7 +128,8 @@ def predict(
     calib = calibrate(tr, seed=seed)
     err = calib.percent_error()
     ranking = sweep(calib, techniques, runtimes, seed=seed,
-                    budget_s=budget_s, max_sim_iters=max_sim_iters)
+                    budget_s=budget_s, max_sim_iters=max_sim_iters,
+                    workers=workers)
     return {"calibration": calib, "percent_error": err, "ranking": ranking}
 
 

@@ -80,12 +80,17 @@ def choose_technique(
     budget_s: Optional[float] = 2.0,
     max_sim_iters: int = MAX_SIM_ITERS,
     techniques=None,
+    workers=None,
 ) -> dict:
     """The calibrated selection sweep behind ``technique="auto"``.
 
-    Returns the decision record: ``chosen`` (argmin predicted T_loop),
-    the full ``ranking``, and the provenance (source, seed, budget,
-    simulated-N) -- everything needed to audit the choice later.
+    The candidate roster runs through ``repro.sim.simulate_many``
+    (``workers=None`` adapts: the default subsampled sweep stays
+    in-process, full-workload sweeps fan out over a process pool --
+    rankings are identical either way).  Returns the decision record:
+    ``chosen`` (argmin predicted T_loop), the full ``ranking``, and the
+    provenance (source, seed, budget, simulated-N) -- everything needed
+    to audit the choice later.
     """
     c, s, source, base = _workload(N, P, costs, speeds, trace, seed)
     if len(s) != P:
@@ -117,7 +122,8 @@ def choose_technique(
         calib.inner_technique = inner_technique or "ss"
     ranking = sweep(calib, techniques=techniques or TECHNIQUES,
                     runtimes=(runtime,), seed=seed, budget_s=budget_s,
-                    min_chunk=min_chunk, max_chunk=max_chunk)
+                    min_chunk=min_chunk, max_chunk=max_chunk,
+                    workers=workers)
     return {
         "chosen": ranking[0].technique,
         "runtime": runtime,

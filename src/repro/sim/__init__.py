@@ -1,0 +1,31 @@
+"""Unified event-kernel DES: one kernel, three runtime topologies.
+
+This package replaces the three near-duplicate hand-rolled event loops
+that ``core/sim.py`` grew through PR 1-4 with a single event-driven
+kernel (``EventQueue`` + ``Resource`` + a shared PE process model) over
+which the one-sided, two-sided, and hierarchical runtimes are
+declarative topology descriptions -- see DESIGN.md Sec. 10.
+
+Layers:
+
+  kernel        -- EventQueue, Resource (serialization points), Engine
+  one_sided / two_sided / hierarchical -- the topology engines
+  telemetry     -- shared adaptive-technique noise/lag front end
+  perturb       -- PE failure/churn, stragglers, speed drift scenarios
+  batch         -- ``simulate_many`` process-pool prediction sweeps
+
+``repro.core.sim`` remains the stable public API (``SimConfig`` /
+``SimResult`` / ``simulate``) and delegates here; non-adaptive event
+streams are pinned byte-identical to the pre-refactor implementations
+by ``tests/test_sim_equivalence.py``.
+"""
+from .batch import resolve_workers, simulate_many  # noqa: F401
+from .kernel import Engine, EventQueue, Resource  # noqa: F401
+from .perturb import (  # noqa: F401
+    PEFailure,
+    Perturbation,
+    SpeedDrift,
+    Straggler,
+)
+from .run import ENGINES, simulate  # noqa: F401
+from .telemetry import AdaptiveTelemetry, telemetry_for  # noqa: F401

@@ -1,0 +1,159 @@
+"""``simulate_many``: batched prediction sweeps with process fan-out.
+
+``replay.predict`` used to evaluate its technique x runtime roster one
+``simulate()`` at a time in roster order; this module fans the whole
+roster out over a process pool instead.  Configs are shipped to the
+workers **once** via the pool initializer -- under the default ``fork``
+start method the shared cost arrays (every candidate of a sweep
+references the *same* empirical-workload array) reach the children by
+copy-on-write, not per-task pickling.
+
+The parallel path returns exactly what the serial path returns: each
+candidate is an independently seeded DES run, so results are
+reproducible regardless of worker count (pinned by
+``tests/test_sim_equivalence.py``).  A wall-clock budget translates to
+"keep every candidate that finished in time" (at least the first one is
+always kept), mirroring the old roster-order budget semantics; dropped
+candidates come back as ``None``.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import sys
+import threading
+import time
+from concurrent.futures import ProcessPoolExecutor, wait
+from concurrent.futures.process import BrokenProcessPool
+from typing import List, Optional, Sequence, Union
+
+from .run import simulate
+
+# Worker-side shared state, installed once per pool worker (fork: COW).
+_SHARED_CONFIGS: Optional[list] = None
+
+
+def _pool_init(configs: list) -> None:
+    global _SHARED_CONFIGS
+    _SHARED_CONFIGS = configs
+
+
+def _pool_run(i: int):
+    return simulate(_SHARED_CONFIGS[i])
+
+
+def _pool_context(explicit: bool):
+    """Pick a start method; None means "no pool" (caller runs serial).
+
+    ``fork`` is the fast path -- configs (and the cost array every sweep
+    candidate shares) reach workers by copy-on-write, no pickling -- and
+    is used whenever it is provably safe: fork available, parent still
+    single-threaded, no JAX runtime loaded (forking a multithreaded
+    parent can deadlock on locks held by other threads).
+
+    When fork is unsafe, ``spawn`` is used only if the caller asked for
+    parallelism *explicitly* (``workers=`` an int or "auto") and the
+    parent's ``__main__`` is importable: spawn re-imports it, so an
+    unguarded top-level script would re-execute (and multiprocessing's
+    recursion guard then wedges the pool).  The adaptive default never
+    takes that risk -- in multithreaded parents it stays serial.
+    Spawn workers re-import only ``repro.sim``'s numpy-level dependency
+    chain (JAX is lazily imported elsewhere and never loads in workers)
+    and receive the configs pickled once per worker.
+    """
+    fork_ok = "fork" in multiprocessing.get_all_start_methods()
+    if fork_ok and threading.active_count() == 1 \
+            and "jax" not in sys.modules:
+        return multiprocessing.get_context("fork")
+    if not explicit:
+        return None
+    main_file = getattr(sys.modules.get("__main__"), "__file__", None)
+    if main_file is None or os.path.exists(main_file):
+        return multiprocessing.get_context("spawn")
+    return None
+
+
+#: Adaptive-parallelism floor (``workers=None``): total simulated
+#: iterations across the batch below which pool startup (~hundreds of ms)
+#: would outweigh the fan-out -- small selection sweeps (``technique=
+#: "auto"`` subsamples to ~4k iterations/candidate) stay in-process.
+PARALLEL_MIN_ITERS = 500_000
+
+
+def resolve_workers(workers: Union[int, str, None], n_tasks: int,
+                    total_iters: int = 0) -> int:
+    """Effective worker count.
+
+    "auto" fills the machine (capped at the task count); None is the
+    adaptive default: fill the machine only when the batch is big enough
+    (``PARALLEL_MIN_ITERS`` simulated iterations) to amortize pool
+    startup, else run serial; <=1 forces serial.
+    """
+    if workers is None:
+        if total_iters < PARALLEL_MIN_ITERS:
+            return 1
+        workers = os.cpu_count() or 1
+    elif workers == "auto":
+        workers = os.cpu_count() or 1
+    return max(min(int(workers), n_tasks), 1)
+
+
+def simulate_many(configs: Sequence, workers: Union[int, str, None] = None,
+                  budget_s: Optional[float] = None) -> List:
+    """Simulate every config; returns results aligned with ``configs``.
+
+    workers: None = adaptive (process pool when the batch is big enough
+        to amortize startup, else serial); "auto" = always one process
+        per core (capped at the number of configs); 0/1 = serial.
+    budget_s: wall-clock budget.  Serial: evaluate in order until the
+        budget is spent.  Parallel: keep every candidate that completed
+        within the budget; candidates still running when it expires are
+        abandoned to finish in the background.  Either way the first
+        config is always evaluated, and dropped candidates are ``None``
+        in the result.
+    """
+    configs = list(configs)
+    results: List = [None] * len(configs)
+    if not configs:
+        return results
+    n = resolve_workers(workers, len(configs),
+                        sum(cf.spec.N for cf in configs))
+    if n <= 1 or len(configs) == 1:
+        deadline = None if budget_s is None else time.monotonic() + budget_s
+        for i, cf in enumerate(configs):
+            if i and deadline is not None and time.monotonic() > deadline:
+                break  # budget spent: keep what's already evaluated
+            results[i] = simulate(cf)
+        return results
+    ctx = _pool_context(explicit=workers is not None)
+    if ctx is None:
+        return simulate_many(configs, workers=1, budget_s=budget_s)
+    try:
+        ex = ProcessPoolExecutor(max_workers=n, mp_context=ctx,
+                                 initializer=_pool_init, initargs=(configs,))
+    except (OSError, PermissionError):  # no subprocesses: degrade to serial
+        return simulate_many(configs, workers=1, budget_s=budget_s)
+    # The budget clock covers the whole sweep, first candidate included
+    # (like the serial branch -- candidate 0 is merely exempt from being
+    # dropped, not from being timed).
+    deadline = None if budget_s is None else time.monotonic() + budget_s
+    try:
+        futs = [ex.submit(_pool_run, i) for i in range(len(configs))]
+        results[0] = futs[0].result()  # >= 1 candidate always evaluated
+        timeout = None if deadline is None \
+            else max(deadline - time.monotonic(), 0.0)
+        wait(futs, timeout=timeout)
+    except BrokenProcessPool:  # workers died (sandbox, OOM): go serial
+        ex.shutdown(wait=False, cancel_futures=True)
+        return simulate_many(configs, workers=1, budget_s=budget_s)
+    # Snapshot what finished inside the budget *before* shutdown: running
+    # candidates cannot be interrupted, so on a blown budget they are
+    # abandoned (shutdown(wait=False) -- they burn down in the background)
+    # and reported as None rather than silently blocking the sweep until
+    # the slowest one completes.
+    done_in_time = [f.done() for f in futs]
+    ex.shutdown(wait=deadline is None, cancel_futures=True)
+    for i, f in enumerate(futs):
+        if results[i] is None and done_in_time[i] and not f.cancelled():
+            results[i] = f.result()
+    return results

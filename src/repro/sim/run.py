@@ -1,0 +1,23 @@
+"""Topology dispatch: one ``simulate`` over the unified kernel."""
+from __future__ import annotations
+
+from repro.core.sim import SimConfig, SimResult
+
+from .hierarchical import HierarchicalEngine
+from .one_sided import OneSidedEngine
+from .two_sided import TwoSidedEngine
+
+ENGINES = {
+    "one_sided": OneSidedEngine,
+    "two_sided": TwoSidedEngine,
+    "hierarchical": HierarchicalEngine,
+}
+
+
+def simulate(cf: SimConfig) -> SimResult:
+    """Run one configuration through its topology engine."""
+    try:
+        engine = ENGINES[cf.impl]
+    except KeyError:
+        raise ValueError(f"unknown impl {cf.impl!r}") from None
+    return engine(cf).run()

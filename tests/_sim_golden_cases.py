@@ -1,0 +1,143 @@
+"""Shared golden-case grid for the DES equivalence pins.
+
+One module, two consumers:
+
+  * ``scripts/capture_sim_fixtures.py`` ran this grid against the
+    pre-refactor triplicated event loops (``core/sim.py`` as of PR 4)
+    and froze the results into ``tests/fixtures/sim_golden.json``;
+  * ``tests/test_sim_equivalence.py`` re-runs the *same* grid against
+    the unified ``repro.sim`` event kernel and pins every case
+    byte-identical (canonical-JSON comparison, shortest-round-trip
+    float reprs) against those fixtures.
+
+The grid covers every non-adaptive technique on all three runtimes
+(adaptive techniques draw lognormal telemetry noise and are covered by
+determinism tests instead -- the byte-identity contract of ISSUE 5 is
+for non-adaptive event streams), plus the degenerate corners that
+historically bite: P=1, chunk bounds, FIFO lock polling, every-PE-its-
+own-node hierarchies, and both master placements.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.chunk_calculus import ADAPTIVE, TECHNIQUES, LoopSpec
+from repro.core.sim import SimConfig
+from repro.core.weights import weights_from_speeds
+
+FIXTURE_VERSION = 1
+FIXTURE_NAME = "sim_golden.json"
+
+#: The byte-identity roster: every technique whose DES run is free of
+#: telemetry noise (the adaptive family consumes the shared RNG through
+#: ``lognormvariate`` and is pinned by determinism tests instead).
+NON_ADAPTIVE = tuple(t for t in TECHNIQUES if t not in ADAPTIVE)
+
+_RUNTIMES = ("one_sided", "two_sided", "hierarchical")
+
+
+def _speeds(P: int) -> np.ndarray:
+    """Deterministic heterogeneous mix (fast / half / quarter cores)."""
+    base = np.array([1.0, 0.5, 0.25])
+    return np.tile(base, (P + 2) // 3)[:P].copy()
+
+
+def _costs(N: int, seed: int) -> np.ndarray:
+    """Seeded lognormal workload (c.o.v. 0.4 around 1 ms)."""
+    rng = np.random.default_rng(seed)
+    sigma = np.sqrt(np.log(1.0 + 0.4 * 0.4))
+    return rng.lognormal(np.log(1e-3) - sigma ** 2 / 2.0, sigma, size=N)
+
+
+def cases() -> list:
+    """The full golden grid, each entry a plain-JSON-able descriptor."""
+    out = []
+    for runtime in _RUNTIMES:
+        for tech in NON_ADAPTIVE:
+            out.append(dict(
+                key=f"{tech}-{runtime}", technique=tech, runtime=runtime,
+                N=400, P=7, seed=3, min_chunk=1, max_chunk=None,
+                nodes=3, inner="gss", coordinator=2, weighted=False,
+                lock_polling_random=True, cost_seed=11))
+    out += [
+        # degenerate single-PE loop
+        dict(key="gss-one_sided-P1", technique="gss", runtime="one_sided",
+             N=37, P=1, seed=0, min_chunk=1, max_chunk=None, nodes=1,
+             inner="ss", coordinator=0, weighted=False,
+             lock_polling_random=True, cost_seed=1),
+        # chunk bounds active on the TSS ramp
+        dict(key="tss-one_sided-bounds", technique="tss", runtime="one_sided",
+             N=400, P=7, seed=5, min_chunk=3, max_chunk=50, nodes=3,
+             inner="ss", coordinator=0, weighted=False,
+             lock_polling_random=True, cost_seed=11),
+        # FIFO window grants (lock_polling_random=False draws no RNG)
+        dict(key="ss-one_sided-fifo", technique="ss", runtime="one_sided",
+             N=200, P=5, seed=2, min_chunk=2, max_chunk=None, nodes=1,
+             inner="ss", coordinator=0, weighted=False,
+             lock_polling_random=False, cost_seed=7),
+        # static per-PE weights through the WF closed form
+        dict(key="wf-one_sided-weighted", technique="wf", runtime="one_sided",
+             N=400, P=6, seed=4, min_chunk=1, max_chunk=None, nodes=2,
+             inner="ss", coordinator=0, weighted=True,
+             lock_polling_random=True, cost_seed=13),
+        # fast master (the two-sided grid above uses the slow 0.25x core)
+        dict(key="gss-two_sided-fast-master", technique="gss",
+             runtime="two_sided", N=400, P=7, seed=3, min_chunk=1,
+             max_chunk=None, nodes=1, inner="ss", coordinator=0,
+             weighted=False, lock_polling_random=True, cost_seed=11),
+        # every PE its own node: outer level does all the scheduling
+        dict(key="fac2-hierarchical-all-nodes", technique="fac2",
+             runtime="hierarchical", N=400, P=7, seed=9, min_chunk=1,
+             max_chunk=None, nodes=7, inner="ss", coordinator=0,
+             weighted=False, lock_polling_random=True, cost_seed=11),
+        # weighted outer technique over nodes, TSS inner
+        dict(key="wf-hierarchical-tss-inner", technique="wf",
+             runtime="hierarchical", N=400, P=6, seed=6, min_chunk=1,
+             max_chunk=None, nodes=3, inner="tss", coordinator=0,
+             weighted=True, lock_polling_random=True, cost_seed=13),
+    ]
+    return out
+
+
+def build_config(case: dict) -> SimConfig:
+    """Rebuild a case's exact ``SimConfig`` (collect_trace always on)."""
+    speeds = _speeds(case["P"])
+    weights = tuple(weights_from_speeds(speeds)) if case["weighted"] else None
+    spec = LoopSpec(case["technique"], N=case["N"], P=case["P"],
+                    weights=weights, min_chunk=case["min_chunk"],
+                    max_chunk=case["max_chunk"])
+    kw = dict(impl=case["runtime"], coordinator=case["coordinator"],
+              seed=case["seed"],
+              lock_polling_random=case["lock_polling_random"],
+              collect_trace=True)
+    if case["runtime"] == "hierarchical":
+        kw["nodes"] = case["nodes"]
+        kw["inner_technique"] = case["inner"]
+    return SimConfig(spec, speeds, _costs(case["N"], case["cost_seed"]), **kw)
+
+
+def _scalar(x):
+    """numpy scalar -> exact python scalar (json float repr round-trips)."""
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    return x
+
+
+def encode_result(r) -> dict:
+    """A ``SimResult`` as plain JSON types, every field the DES reports."""
+    return {
+        "T_loop": _scalar(r.T_loop),
+        "finish": [float(x) for x in r.finish],
+        "n_claims": int(r.n_claims),
+        "cov": _scalar(r.cov),
+        "per_pe_iters": [int(x) for x in r.per_pe_iters],
+        "master_serve_time": _scalar(r.master_serve_time),
+        "mean_claim_latency": _scalar(r.mean_claim_latency),
+        "n_rmw_global": int(r.n_rmw_global),
+        "n_rmw_local": int(r.n_rmw_local),
+        "chunk_trace": [
+            {k: _scalar(v) for k, v in rec.items()} for rec in r.chunk_trace
+        ] if r.chunk_trace is not None else None,
+    }

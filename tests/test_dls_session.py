@@ -223,14 +223,16 @@ def test_loop_warns_on_noop_weight_policy():
         dls.loop(1_000, technique="fac2", P=4)
 
 
-def test_deprecated_shims_warn_and_work():
-    from repro.core import LoopSpec, run_threaded_one_sided, run_threaded_two_sided
-
-    with pytest.warns(DeprecationWarning):
-        claims = run_threaded_one_sided(LoopSpec("fac2", N=1000, P=4),
-                                        lambda a, b: None)
+def test_threaded_execution_via_facade():
+    """The migration target of the removed ``run_threaded_*`` shims: the
+    facade's threads executor covers both protocols (and the shim names
+    are really gone from ``repro.core``)."""
+    claims = dls.loop(1000, technique="fac2", P=4).execute(
+        lambda a, b: None, executor="threads").claims
     assert sum(c.size for c in claims) == 1000
-    with pytest.warns(DeprecationWarning):
-        claims = run_threaded_two_sided(LoopSpec("ss", N=500, P=4),
-                                        lambda a, b: None)
+    claims = dls.loop(500, technique="ss", P=4, runtime="two_sided").execute(
+        lambda a, b: None, executor="threads").claims
     assert sum(c.size for c in claims) == 500
+    import repro.core
+    assert not hasattr(repro.core, "run_threaded_one_sided")
+    assert not hasattr(repro.core, "run_threaded_two_sided")

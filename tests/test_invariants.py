@@ -25,7 +25,14 @@ import numpy as np
 import pytest
 
 from repro import dls
-from repro.core import HierarchicalWindow, ThreadWindow
+from repro.core import (
+    HierarchicalWindow,
+    LoopSpec,
+    SimConfig,
+    ThreadWindow,
+    simulate,
+)
+from repro.sim import PEFailure, SpeedDrift, Straggler
 
 try:
     from hypothesis import HealthCheck, given, settings
@@ -265,3 +272,153 @@ if HAVE_HYPOTHESIS:
         """The same invariant, hammered (slow tier)."""
         claims = drain_serial(session_for(case, runtime))
         assert_partition(claims, case["N"])
+
+
+# ---------------------------------------------------------------------------
+# Perturbation layer (repro.sim.perturb): the same conservation invariant
+# under PE failure/churn, straggler injection, and speed drift -- in every
+# DES topology, through the unified kernel's shared re-claim path.
+# ---------------------------------------------------------------------------
+
+SIM_N, SIM_P = 2_400, 6
+
+
+def _sim_costs(n=SIM_N, seed=17):
+    rng = np.random.default_rng(seed)
+    return rng.lognormal(np.log(1e-3), 0.4, size=n)
+
+
+def _sim(technique, runtime, perturbations=None, n=SIM_N, seed=3, **kw):
+    speeds = np.array([1.0, 0.5, 1.0, 0.5, 1.0, 0.5])[:SIM_P]
+    if runtime == "hierarchical":
+        kw.setdefault("nodes", 3)
+    return simulate(SimConfig(
+        LoopSpec(technique, N=n, P=SIM_P), speeds, _sim_costs(n),
+        impl=runtime, seed=seed, collect_trace=True,
+        perturbations=perturbations, **kw))
+
+
+def _assert_exactly_once(r, n):
+    """Every iteration executed exactly once (trace-level), sums conserve."""
+    seen = np.zeros(n, np.int64)
+    for rec in r.chunk_trace:
+        seen[rec["start"]:rec["start"] + rec["size"]] += 1
+    assert (seen == 1).all(), np.flatnonzero(seen != 1)[:10]
+    assert r.per_pe_iters.sum() == n
+    assert sum(rec["size"] for rec in r.chunk_trace) == n
+
+
+@pytest.mark.parametrize("runtime", RUNTIMES)
+@pytest.mark.parametrize("technique", ["ss", "gss", "fac2", "tss"])
+def test_pe_death_reclaim_conserves_grid(runtime, technique):
+    """PE churn: two PEs die mid-loop; their in-flight remainders are
+    re-claimed by survivors, and the partition property still holds."""
+    base = _sim(technique, runtime)
+    for frac in (0.0, 0.3, 0.75):
+        deaths = (PEFailure(pe=3, at=base.T_loop * frac),
+                  PEFailure(pe=5, at=base.T_loop * max(frac, 0.1) * 0.8))
+        r = _sim(technique, runtime, perturbations=deaths)
+        _assert_exactly_once(r, SIM_N)
+        # the dead PE stopped at (or before) its death time
+        assert r.finish[3] <= deaths[0].at + 1e-12
+        # ...and the loop still completed entirely
+        assert r.T_loop > 0 and r.per_pe_iters[3] <= base.per_pe_iters[3] \
+            or base.per_pe_iters[3] == 0
+
+
+@pytest.mark.parametrize("runtime", RUNTIMES)
+def test_pe_death_with_adaptive_technique_conserves(runtime):
+    """Churn composes with live telemetry (adaptive chunk sizing)."""
+    kw = dict(inner_technique="af") if runtime == "hierarchical" else {}
+    tech = "gss" if runtime == "hierarchical" else "awf_b"
+    base = _sim(tech, runtime, **kw)
+    r = _sim(tech, runtime, perturbations=(
+        PEFailure(pe=4, at=base.T_loop * 0.4),), **kw)
+    _assert_exactly_once(r, SIM_N)
+
+
+@pytest.mark.parametrize("runtime", RUNTIMES)
+def test_straggler_and_drift_conserve_and_slow_down(runtime):
+    base = _sim("fac2", runtime)
+    r = _sim("fac2", runtime, perturbations=(
+        Straggler(pe=2, at=0.0, factor=0.2),
+        SpeedDrift(amplitude=0.3, period=base.T_loop / 2),
+    ))
+    _assert_exactly_once(r, SIM_N)
+    # a 5x-slowed PE must lose iterations relative to the clean run
+    assert r.per_pe_iters[2] < base.per_pe_iters[2]
+
+
+@pytest.mark.parametrize("runtime", RUNTIMES)
+def test_perturbed_runs_deterministic(runtime):
+    perts = (PEFailure(pe=1, at=0.4), Straggler(pe=2, at=0.1, factor=0.5),
+             SpeedDrift(amplitude=0.2, period=0.7))
+    a = _sim("fac2", runtime, perturbations=perts)
+    b = _sim("fac2", runtime, perturbations=perts)
+    assert a.T_loop == b.T_loop
+    assert (a.finish == b.finish).all()
+    assert (a.per_pe_iters == b.per_pe_iters).all()
+    assert a.chunk_trace == b.chunk_trace
+
+
+@pytest.mark.parametrize("runtime", RUNTIMES)
+def test_never_firing_perturbation_changes_nothing(runtime):
+    """A death scheduled after the loop ends exercises the perturbed code
+    path but must reproduce the clean run exactly (floats included)."""
+    base = _sim("gss", runtime)
+    r = _sim("gss", runtime,
+             perturbations=(PEFailure(pe=1, at=base.T_loop * 10),))
+    assert r.T_loop == base.T_loop
+    assert (r.finish == base.finish).all()
+    assert r.chunk_trace == base.chunk_trace
+    assert r.n_claims == base.n_claims
+
+
+def test_scenario_validation():
+    spec = LoopSpec("ss", N=10, P=2)
+    costs, speeds = np.full(10, 1e-3), np.ones(2)
+    with pytest.raises(ValueError, match="survive"):
+        simulate(SimConfig(spec, speeds, costs, perturbations=(
+            PEFailure(0, 0.1), PEFailure(1, 0.2))))
+    with pytest.raises(ValueError, match="master death"):
+        simulate(SimConfig(spec, speeds, costs, impl="two_sided",
+                           perturbations=(PEFailure(0, 0.1),)))
+    with pytest.raises(ValueError, match="amplitude"):
+        simulate(SimConfig(spec, speeds, costs,
+                           perturbations=(SpeedDrift(amplitude=1.5),)))
+    with pytest.raises(TypeError):
+        simulate(SimConfig(spec, speeds, costs, perturbations=("boom",)))
+
+
+def test_sim_executor_forwards_perturbations():
+    """The facade path: dls sessions pass scenarios into the kernel."""
+    session = dls.loop(SIM_N, technique="fac2", P=SIM_P)
+    report = session.execute(
+        None, executor="sim", costs=_sim_costs(), speeds=np.ones(SIM_P),
+        collect_trace=True, perturbations=(PEFailure(pe=1, at=0.05),))
+    assert report.total_iters == SIM_N
+    seen = np.zeros(SIM_N, np.int64)
+    for rec in report.chunk_times:
+        seen[rec["start"]:rec["start"] + rec["size"]] += 1
+    assert (seen == 1).all()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("runtime", RUNTIMES)
+def test_pe_churn_deep_grid(runtime):
+    """Randomized churn scenarios, hammered (slow tier): any subset of
+    non-coordinator PEs dying at any time conserves in any technique."""
+    rng = random.Random(20260801 + RUNTIMES.index(runtime))
+    for _ in range(40):
+        tech = rng.choice(["ss", "gss", "fac2", "tss", "tfss", "wf",
+                           "af", "awf_c"])
+        base = _sim(tech, runtime, seed=rng.randrange(100))
+        n_dead = rng.randint(1, SIM_P - 2)
+        victims = rng.sample([p for p in range(SIM_P) if p != 0], n_dead)
+        perts = tuple(PEFailure(pe=v, at=rng.random() * base.T_loop * 1.1)
+                      for v in victims)
+        if rng.random() < 0.5:
+            perts += (SpeedDrift(amplitude=0.25, period=base.T_loop / 3),)
+        r = _sim(tech, runtime, perturbations=perts,
+                 seed=rng.randrange(100))
+        _assert_exactly_once(r, SIM_N)

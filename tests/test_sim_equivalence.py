@@ -1,0 +1,96 @@
+"""Golden-fixture pins: the unified kernel vs the pre-refactor DES.
+
+ISSUE 5's byte-identity contract: collapsing the three hand-rolled
+event loops into the ``repro.sim`` kernel must not move a single float
+in any non-adaptive event stream.  ``tests/fixtures/sim_golden.json``
+was captured from the *pre-refactor* ``core/sim.py`` (the triplicated
+implementations of PR 2-4) by ``scripts/capture_sim_fixtures.py``;
+every case here re-simulates through the unified kernel and compares
+the canonical JSON encoding -- full ``SimResult`` plus the per-chunk
+event trace -- byte for byte.
+
+Also pinned here: ``simulate_many`` returns exactly what serial
+``simulate`` returns at any worker count (the batch API may never
+change results), and its budget semantics keep at least the first
+candidate.
+"""
+import json
+import pathlib
+
+import pytest
+
+import _sim_golden_cases as gc
+from repro.core.sim import simulate, simulate_many
+
+FIXTURE_PATH = pathlib.Path(__file__).parent / "fixtures" / gc.FIXTURE_NAME
+
+
+@pytest.fixture(scope="module")
+def golden():
+    data = json.loads(FIXTURE_PATH.read_text())
+    assert data["version"] == gc.FIXTURE_VERSION
+    return {e["case"]["key"]: e for e in data["cases"]}
+
+
+_KEYS = [c["key"] for c in gc.cases()]
+
+
+def test_fixture_grid_is_current(golden):
+    """The committed fixtures cover exactly the shared case grid (a case
+    added to the grid without re-capturing must fail loudly)."""
+    assert sorted(golden) == sorted(_KEYS)
+    # grid sanity: every technique x runtime combination is pinned
+    assert len(_KEYS) >= len(gc.NON_ADAPTIVE) * 3
+
+
+@pytest.mark.parametrize("key", _KEYS)
+def test_event_stream_byte_identical(key, golden):
+    entry = golden[key]
+    r = simulate(gc.build_config(entry["case"]))
+    fresh = json.dumps(gc.encode_result(r), sort_keys=True)
+    pinned = json.dumps(entry["result"], sort_keys=True)
+    assert fresh == pinned, (
+        f"{key}: unified kernel drifted from the pre-refactor event stream "
+        "(if the change is intentional, re-capture with "
+        "scripts/capture_sim_fixtures.py and say so in the PR)")
+
+
+# ---------------------------------------------------------------------------
+# simulate_many: parallel fan-out may never change results
+# ---------------------------------------------------------------------------
+
+
+def _batch_configs(n=6):
+    return [gc.build_config(c) for c in gc.cases()[:n]]
+
+
+def test_simulate_many_serial_matches_simulate():
+    cfgs = _batch_configs()
+    for r_many, cf in zip(simulate_many(cfgs, workers=1), cfgs):
+        assert json.dumps(gc.encode_result(r_many), sort_keys=True) == \
+            json.dumps(gc.encode_result(simulate(cf)), sort_keys=True)
+
+
+def test_simulate_many_parallel_matches_serial():
+    cfgs = _batch_configs()
+    serial = simulate_many(cfgs, workers=1)
+    par = simulate_many(cfgs, workers=2)
+    for a, b in zip(serial, par):
+        assert json.dumps(gc.encode_result(a), sort_keys=True) == \
+            json.dumps(gc.encode_result(b), sort_keys=True)
+
+
+def test_simulate_many_budget_keeps_first():
+    cfgs = _batch_configs()
+    for workers in (1, 2):
+        out = simulate_many(cfgs, workers=workers, budget_s=0.0)
+        assert out[0] is not None  # >= 1 candidate always evaluated
+        assert len(out) == len(cfgs)
+
+
+def test_simulate_many_empty_and_single():
+    assert simulate_many([]) == []
+    cf = _batch_configs(1)[0]
+    (r,) = simulate_many([cf], workers="auto")
+    assert json.dumps(gc.encode_result(r), sort_keys=True) == \
+        json.dumps(gc.encode_result(simulate(cf)), sort_keys=True)
