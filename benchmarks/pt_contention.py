@@ -1,0 +1,105 @@
+"""pt: measured RMW latency, contention scaling, and the DES cross-check.
+
+Three claims about the real passive-target window (``repro.pt``),
+measured on this machine with real OS processes:
+
+1. **RMW latency**: per-op cost of ``SharedMemWindow.fetch_add`` for the
+   active atomicity backend ("atomics" when the package is importable,
+   else "lockf" -- the row name records which one ran).
+2. **Contention scaling**: P processes hammering *one hot key* -- the
+   chunk-calculus serialization point.  Reported per P as the per-op
+   latency one contender perceives.
+3. **Measured vs DES-predicted T_loop**: run a real ``processes``
+   session (sleep-based per-iteration cost, so wall time tracks the
+   parallel model even on one core), capture its trace, calibrate the
+   DES *with the measured RMW constant* (the ``o_rma=`` override of
+   ``replay.calibrate``), replay, and report the percent error.  The
+   pinned bound below is the acceptance criterion: the calibrated DES
+   must predict the real multi-process run, closing the
+   reproduce-then-predict loop against real processes.
+
+Run:  PYTHONPATH=src python benchmarks/pt_contention.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+from repro import dls
+from repro.pt import measure_contention, measure_rmw_latency, workloads
+from repro.replay import Trace, calibrate
+
+# Acceptance bound for |T_sim - T_native| / T_native on the pinned
+# configuration (fac2/one_sided, sleep workload).  Generous by design:
+# it must hold on a loaded single-core CI runner where 8 real processes
+# time-share -- but it still catches an order-of-magnitude DES drift.
+PIN_ERROR_PCT = 35.0
+
+
+def bench_latency(quick: bool):
+    lat = measure_rmw_latency(ops=1000 if quick else 5000,
+                              repeats=3 if quick else 7)
+    print(f"rmw_uncontended_{lat.backend},{lat.o_rma_mean * 1e6:.3f},"
+          f"min={lat.o_rma_min * 1e6:.3f}us")
+    return lat
+
+
+def bench_contention(lat, quick: bool):
+    p_list = (1, 2, 4, 8) if quick else (1, 2, 4, 8, 16)
+    lat = measure_contention(p_list=p_list, ops=300 if quick else 2000,
+                             base=lat)
+    for p in p_list:
+        print(f"rmw_contended_p{p}_{lat.backend},{lat.per_p[p] * 1e6:.3f},"
+              f"x{lat.per_p[p] / max(lat.per_p[p_list[0]], 1e-12):.2f}")
+    return lat
+
+
+def bench_pin(lat, quick: bool) -> float:
+    """Measured vs DES-predicted T_loop with measured RMW constants."""
+    N = 800 if quick else 4000
+    P = 8
+    cost_us = 500.0
+    shm, name = workloads.alloc_hits(N)
+    try:
+        session = dls.loop(N, technique="fac2", P=P, window="shm")
+        work = functools.partial(_sleep_and_mark, name, cost_us)
+        report = session.execute(work, executor="processes", timeout=120.0)
+        assert report.total_iters == N, "processes run lost iterations"
+        trace = Trace.from_report(report, meta={"seed": 0})
+        cal = calibrate(trace, **lat.calibration_overrides(contended_p=P))
+        err = cal.percent_error()
+        ideal = N * cost_us * 1e-6 / P
+        print(f"pt_native_T_loop,{report.wall_time * 1e6:.0f},"
+              f"ideal={ideal * 1e6:.0f}us")
+        print(f"pt_predicted_T_loop,{cal.simulate().T_loop * 1e6:.0f},"
+              f"pct_err={err:.1f}")
+        print(f"pt_pin_pct_err,{err:.2f},bound={PIN_ERROR_PCT}")
+        if err > PIN_ERROR_PCT:
+            raise AssertionError(
+                f"DES prediction off by {err:.1f}% > {PIN_ERROR_PCT}% "
+                "on the pinned fac2/one_sided processes run")
+        session.close()
+        return err
+    finally:
+        shm.close()
+        shm.unlink()
+
+
+def _sleep_and_mark(name: str, cost_us: float, a: int, b: int) -> None:
+    workloads.sleep_iters(cost_us, a, b)
+    workloads.mark_hits(name, a, b)
+
+
+def main(quick: bool = True) -> None:
+    lat = bench_latency(quick)
+    lat = bench_contention(lat, quick)
+    bench_pin(lat, quick)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", dest="quick", action="store_false")
+    ap.set_defaults(quick=True)
+    args = ap.parse_args()
+    main(quick=args.quick)

@@ -62,6 +62,12 @@ def _kernels(quick: bool) -> None:
     kernels_bench.main(quick=quick)
 
 
+def _pt_contention(quick: bool) -> None:
+    from benchmarks import pt_contention
+
+    pt_contention.main(quick=quick)
+
+
 def _roofline(quick: bool) -> None:
     try:
         from benchmarks import roofline
@@ -92,6 +98,9 @@ BENCHMARKS = (
      "Batched sweeps: serial vs simulate_many on the predict roster",
      _sim_sweep),
     ("kernels", "Kernels (interpret mode; see header caveat)", _kernels),
+    ("pt_contention",
+     "pt: measured RMW latency / contention + DES prediction pin",
+     _pt_contention),
     ("roofline", "Roofline (from dry-run artifacts, if present)", _roofline),
 )
 

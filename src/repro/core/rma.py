@@ -8,12 +8,19 @@ atomic **fetch-and-add** that involves no CPU cycles on any worker (passive
 target).
 
 On a TPU cluster there is no MPI, but the same semantics exist at the
-host-coordination plane.  ``Window`` is the abstraction; three backends:
+host-coordination plane.  ``Window`` is the abstraction; four backends:
 
   * ``ThreadWindow``   -- in-process, lock-based.  Used by tests, the
     single-host data pipeline, and the threaded examples.  Models exactly
-    the atomicity (and, optionally, the serialization latency) of the RMA
-    window.
+    the atomicity of the RMA window with one lock *per counter*, so
+    independent counters (telemetry vs the scheduling pointer) never
+    contend; ``rmw_latency`` optionally models per-counter serialization.
+  * ``SharedMemWindow`` (``repro.pt.window``) -- the real cross-process
+    single-host backend: an int64 slab in ``multiprocessing.shared_memory``
+    with a fixed key directory, attachable by name from any OS process;
+    RMWs are lock-free (``atomics``) or per-slot record-locked
+    (``fcntl``).  This is the window the ``processes`` executor schedules
+    through -- see DESIGN.md Sec. 11.
   * ``KVStoreWindow``  -- the real-cluster backend: JAX's distributed
     coordination service (``jax.distributed``) exposes
     ``key_value_increment`` -- an atomic fetch-and-add served by the
@@ -25,10 +32,14 @@ host-coordination plane.  ``Window`` is the abstraction; three backends:
   * ``SimWindow``      -- a simulated-clock window used by the discrete-event
     simulator (``core/sim.py``); claims advance a virtual clock and model the
     contention/fairness of Lock-Polling (the paper's first observation in
-    Sec. 5).
+    Sec. 5).  It keeps the *single* lock on purpose: the window as one
+    serialization point is the thing being modeled.
 
-All backends implement ``fetch_add(key, delta) -> old_value`` and
-``read(key)``.
+All backends implement ``fetch_add(key, delta) -> old_value``, ``read(key)``
+and ``read_many(keys)``; backends that may be unavailable in a given
+environment (KV store, shared memory) answer ``availability()`` with a
+machine-checkable reason, so callers (and test skips) never invent their
+own.
 
 ``HierarchicalWindow`` composes a global window with per-node local windows
 (the paper's listed shared-memory window creation; the follow-up's MPI+MPI
@@ -54,52 +65,95 @@ class Window:
     def reset(self, key: str, value: int = 0) -> None:
         raise NotImplementedError
 
+    def read_many(self, keys: Sequence[str]) -> List[int]:
+        """Batch read.  The default loops ``read`` (one RMW / lock round per
+        key); backends with cheaper batch paths (one lock round, one slab
+        pass) override.  No cross-key snapshot atomicity is promised --
+        exactly like issuing the reads back-to-back."""
+        return [self.read(k) for k in keys]
+
+    @classmethod
+    def availability(cls) -> "tuple[bool, str]":
+        """(usable, reason).  The single source of truth for "can this
+        backend work in this environment" -- test skips and ``make_window``
+        route through it so the reason can never go stale relative to the
+        constructor's actual requirements.  Base windows are always usable."""
+        return True, ""
+
+    @classmethod
+    def available(cls) -> bool:
+        """Convenience boolean over :meth:`availability`."""
+        return cls.availability()[0]
+
 
 class ThreadWindow(Window):
-    """In-process window: a dict of counters behind a lock.
+    """In-process window: a dict of counters, one lock *per counter*.
 
-    ``rmw_latency`` (seconds) optionally sleeps while *holding* the lock to
-    model the serialization of window RMWs -- used by concurrency tests to
-    widen race windows, never in production paths.
+    A real RMA window serializes per address, not per window: fetch-adds on
+    ``loop0/i`` and on a telemetry counter proceed independently.  The
+    per-key locks reproduce that -- the ``threads`` executor's PerfModel
+    traffic no longer queues behind the scheduling pointer.
+
+    ``rmw_latency`` (seconds) optionally sleeps while *holding* the key's
+    lock to model the serialization of window RMWs -- used by concurrency
+    tests to widen race windows, never in production paths.
     """
 
     def __init__(self, initial: Optional[Dict[str, int]] = None, rmw_latency: float = 0.0):
-        self._lock = threading.Lock()
+        self._meta = threading.Lock()  # guards per-key lock creation only
         self._v: Dict[str, int] = dict(initial or {})
+        self._key_locks: Dict[str, threading.Lock] = {
+            k: threading.Lock() for k in self._v}
         self._rmw_latency = rmw_latency
 
+    def _cell(self, key: str) -> threading.Lock:
+        lk = self._key_locks.get(key)
+        if lk is None:
+            with self._meta:
+                lk = self._key_locks.setdefault(key, threading.Lock())
+        return lk
+
     def fetch_add(self, key: str, delta: int) -> int:
-        with self._lock:
+        with self._cell(key):
             old = self._v.get(key, 0)
             self._v[key] = old + delta
             if self._rmw_latency:
-                # Sleep *inside* the lock on purpose: the latency models the
-                # serialization of the RMW at the window, not wire time.
+                # Sleep *inside* the key's lock on purpose: the latency
+                # models the serialization of RMWs *on that counter*.
                 time.sleep(self._rmw_latency)
             return old
 
     def read(self, key: str) -> int:
-        with self._lock:
+        with self._cell(key):
             return self._v.get(key, 0)
 
     def reset(self, key: str, value: int = 0) -> None:
-        with self._lock:
+        with self._cell(key):
             self._v[key] = value
+
+    def read_many(self, keys: Sequence[str]) -> List[int]:
+        # dict reads are atomic under the GIL; a batch snapshot needs no
+        # locks at all (same guarantee as back-to-back read() calls).
+        v = self._v
+        return [v.get(k, 0) for k in keys]
 
 
 class SimWindow(ThreadWindow):
     """Clocked window for deterministic overhead accounting.
 
     Functionally a ``ThreadWindow``, but every RMW advances a virtual clock
-    by ``o_rma`` seconds (the window is the serialization point, as in the
-    paper's Sec. 5 Lock-Polling observation) and is counted.  Lets sessions
-    report modeled coordination cost (``clock``) without wall-clock noise;
-    the full contention/fairness model lives in ``core/sim.py``.
+    by ``o_rma`` seconds and is counted -- behind ONE window-wide lock,
+    because "the window is a single serialization point" is precisely the
+    paper's Sec. 5 Lock-Polling observation this backend exists to model.
+    Lets sessions report modeled coordination cost (``clock``) without
+    wall-clock noise; the full contention/fairness model lives in
+    ``core/sim.py``.
     """
 
     def __init__(self, initial: Optional[Dict[str, int]] = None,
                  o_rma: float = 2e-6):
         super().__init__(initial)
+        self._lock = threading.Lock()  # the modeled serialization point
         self.o_rma = o_rma
         self.clock = 0.0
         self.n_rmw = 0
@@ -111,6 +165,19 @@ class SimWindow(ThreadWindow):
             self.n_rmw += 1
             self.clock += self.o_rma
             return old
+
+    def read(self, key: str) -> int:
+        with self._lock:
+            return self._v.get(key, 0)
+
+    def reset(self, key: str, value: int = 0) -> None:
+        with self._lock:
+            self._v[key] = value
+
+    def read_many(self, keys: Sequence[str]) -> List[int]:
+        with self._lock:
+            v = self._v
+            return [v.get(k, 0) for k in keys]
 
     def reset_clock(self) -> None:
         """Zero the clock/RMW accounting so one window can serve many loops
@@ -250,33 +317,36 @@ class KVStoreWindow(Window):
     def __init__(self, namespace: str = "repro/dls"):
         from jax._src import distributed
 
+        ok, reason = self.availability()
+        if not ok:
+            raise RuntimeError(f"KVStoreWindow unavailable: {reason}")
         state = distributed.global_state
         if state.client is None:
             raise RuntimeError(
                 "KVStoreWindow requires jax.distributed.initialize(); "
                 "use ThreadWindow for single-host runs."
             )
-        if not hasattr(state.client, "key_value_increment"):
-            # Older jaxlib coordination clients expose only get/set -- there
-            # is no atomic RMW to build a correct window on.
-            raise RuntimeError(
-                "this jax version's coordination client has no "
-                "key_value_increment (atomic fetch-add); KVStoreWindow is "
-                "unavailable -- use ThreadWindow or upgrade jax."
-            )
         self._client = state.client
         self._ns = namespace
 
-    @staticmethod
-    def available() -> bool:
-        """True if the running jax exposes the atomic-increment primitive."""
+    @classmethod
+    def availability(cls) -> "tuple[bool, str]":
+        """Usable iff the running jax exposes the atomic-increment primitive.
+
+        Older jaxlib coordination clients expose only get/set -- there is no
+        atomic RMW to build a correct window on.
+        """
         try:
             from jax._src.lib import xla_extension
 
-            return hasattr(xla_extension.DistributedRuntimeClient,
-                           "key_value_increment")
-        except Exception:
-            return False
+            if hasattr(xla_extension.DistributedRuntimeClient,
+                       "key_value_increment"):
+                return True, ""
+            return False, ("this jax version's coordination client has no "
+                           "key_value_increment (atomic fetch-add); use "
+                           "ThreadWindow/SharedMemWindow or upgrade jax")
+        except Exception as e:  # no jaxlib at all
+            return False, f"jax coordination client not importable ({e!r})"
 
     def _k(self, key: str) -> str:
         return f"{self._ns}/{key}"
@@ -298,11 +368,23 @@ class KVStoreWindow(Window):
 
 
 def make_window(backend: str = "auto", **kw) -> Window:
-    """Pick a window backend. 'auto' prefers the KV store on multi-host runs."""
+    """Pick a window backend. 'auto' prefers the KV store on multi-host runs.
+
+    ``"shm"`` builds a :class:`repro.pt.window.SharedMemWindow` -- the real
+    cross-process backend the ``processes`` executor schedules through
+    (imported lazily; ``repro.pt`` is stdlib-only).
+    """
     if backend == "thread":
         return ThreadWindow(**kw)
     if backend == "kvstore":
         return KVStoreWindow(**kw)
+    if backend == "shm":
+        from repro.pt.window import SharedMemWindow
+
+        ok, reason = SharedMemWindow.availability()
+        if not ok:
+            raise RuntimeError(f"SharedMemWindow unavailable: {reason}")
+        return SharedMemWindow.create(**kw)
     if backend == "sim":
         return SimWindow(**kw)
     if backend == "auto":

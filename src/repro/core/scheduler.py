@@ -65,6 +65,8 @@ class OneSidedRuntime:
         self.window = window if window is not None else ThreadWindow()
         # Namespace the two counters per loop so monotonic KV backends work.
         lid = next(_loop_ids) if loop_id is None else loop_id
+        self.loop_id = lid  # published: a child process rebuilding this
+        # runtime against the same (shared) window must reuse the namespace
         self._ki = f"loop{lid}/i"
         self._kl = f"loop{lid}/lp"
 
@@ -172,6 +174,7 @@ class HierarchicalRuntime:
                 f"window has {window.nodes} node levels, runtime wants {nodes}")
         self.window = window
         lid = next(_loop_ids) if loop_id is None else loop_id
+        self.loop_id = lid  # published for cross-process runtime rebuilds
         self._pfx = f"loop{lid}"
         self._gi = f"{self._pfx}/i"
         self._gl = f"{self._pfx}/lp"

@@ -154,6 +154,10 @@ class PerfModel:
                   for c in ("n", "iters", "t_us", "tt_us", "m_ns", "m2_ns2"))
             for j in range(P)
         ]
+        # Flat key list in column-major (counter, pe) order: one
+        # ``read_many`` batch per snapshot instead of 6*P read rounds.
+        self._flat_keys = [self._keys[j][c] for c in range(6)
+                           for j in range(P)]
 
     def record(self, pe: int, iters: int, seconds: float,
                sched_seconds: float = 0.0) -> None:
@@ -176,11 +180,11 @@ class PerfModel:
         # arbitrary-precision ints and second-scale iteration means push
         # ns^2 sums past int64 within a few chunks -- the sigma estimator
         # is statistical, so float rounding is harmless there.
-        cols = [np.zeros(self.P, dtype=np.int64) for _ in range(5)]
-        cols.append(np.zeros(self.P, dtype=np.float64))
-        for j in range(self.P):
-            for c, key in enumerate(self._keys[j]):
-                cols[c][j] = self.window.read(key)
+        vals = self.window.read_many(self._flat_keys)
+        P = self.P
+        cols = [np.asarray(vals[c * P:(c + 1) * P],
+                           dtype=np.int64 if c < 5 else np.float64)
+                for c in range(6)]
         return PerfSnapshot(*cols)
 
     # -- derived quantities -------------------------------------------------

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core.scheduler import Claim, TwoSidedRuntime
 
-EXECUTORS = ("serial", "threads", "sim")
+EXECUTORS = ("serial", "threads", "processes", "sim")
 
 WorkFn = Callable[[int, int], None]
 
@@ -40,6 +40,12 @@ def execute(session, work_fn: Optional[WorkFn], executor: str = "threads",
         if isinstance(session.runtime, TwoSidedRuntime):
             return _threads_two_sided(session, work_fn, **kw)
         return _threads_one_sided(session, work_fn, **kw)
+    if executor == "processes":
+        # real OS processes over a shared-memory window (repro.pt): the
+        # session must have been opened with window="shm"
+        from repro.pt.executor import execute_processes
+
+        return execute_processes(session, work_fn, **kw)
     if executor == "sim":
         return _sim(session, **kw)
     raise ValueError(f"unknown executor {executor!r}; pick from {EXECUTORS}")

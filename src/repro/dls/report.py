@@ -36,7 +36,7 @@ class SessionReport:
     N: int
     P: int
     runtime: str  # "one_sided" | "two_sided" | "hierarchical"
-    executor: Optional[str]  # "serial" | "threads" | "sim" | None (manual)
+    executor: Optional[str]  # "serial"|"threads"|"processes"|"sim"|None (manual)
     per_pe_claims: List[List[Claim]]
     per_pe_iters: np.ndarray  # iterations executed (sim) or claimed, per PE
     busy_time: np.ndarray  # seconds of work_fn execution per PE
@@ -68,6 +68,11 @@ class SessionReport:
     # predicted ranking (ordered sweep of simulated T_loop), seed, budget,
     # and workload source.  None for explicitly chosen techniques.
     auto_decision: Optional[dict] = None
+    # executor="processes" only (repro.pt): start method, atomicity
+    # backend ("atomics"/"lockf"), per-PE process stats (pid, chunks,
+    # RMW counts, death/salvage/orphan accounting), and the orphan
+    # hand-off log.  None for in-process executors.
+    process_stats: Optional[dict] = None
 
     @property
     def claims(self) -> List[Claim]:
@@ -117,6 +122,11 @@ class SessionReport:
             rmw += f" adapt={self.n_weight_updates}"
         if self.auto_decision:
             rmw += f" auto->{self.auto_decision.get('chosen')}"
+        if self.process_stats:
+            ps = self.process_stats
+            rmw += (f" procs[{ps.get('start_method')}/"
+                    f"{ps.get('window_backend')}"
+                    f"{' deaths=' + str(ps['n_deaths']) if ps.get('n_deaths') else ''}]")
         return (
             f"{self.technique} N={self.N} P={self.P} [{self.runtime}"
             f"{'/' + self.executor if self.executor else ''}] "
@@ -149,6 +159,7 @@ class SessionReport:
             "adaptation": self.adaptation,
             "chunk_times": self.chunk_times,
             "auto_decision": self.auto_decision,
+            "process_stats": self.process_stats,
         }
 
     def to_json(self, indent: Optional[int] = None) -> str:
@@ -184,6 +195,7 @@ class SessionReport:
             adaptation=d.get("adaptation"),
             chunk_times=d.get("chunk_times"),
             auto_decision=d.get("auto_decision"),
+            process_stats=d.get("process_stats"),
         )
 
     @classmethod

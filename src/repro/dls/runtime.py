@@ -91,6 +91,12 @@ def make_runtime(
                 window = HierarchicalWindow(nodes)
             elif window == "sim":
                 window = HierarchicalWindow.sim(nodes)
+            elif window == "shm":
+                # both levels in shared memory: the processes executor
+                # needs every level attachable from any OS process
+                from repro.pt.window import shm_hierarchical
+
+                window = shm_hierarchical(nodes)
             elif isinstance(window, str):
                 window = HierarchicalWindow(nodes, global_window=make_window(window))
             elif isinstance(window, Window):

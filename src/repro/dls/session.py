@@ -173,12 +173,40 @@ class DLSession:
         the executor began) additionally log a per-chunk timing record --
         the ``repro.replay`` capture plane (``SessionReport.chunk_times``).
         """
+        self._feed_policy(pe, iters, seconds, sched_seconds)
+        self._log_metrics(pe, iters, seconds, sched_seconds, claim,
+                          t_start, t_end)
+
+    def record_remote(self, pe: int, iters: int, seconds: float,
+                      sched_seconds: float = 0.0, *,
+                      claim: Optional[Claim] = None,
+                      t_start: Optional[float] = None,
+                      t_end: Optional[float] = None,
+                      feed_policy: bool = False) -> None:
+        """Metrics-only feedback for a chunk executed in *another process*.
+
+        The ``processes`` executor's workers feed their own (shared-slab)
+        adaptive policies as they execute; feeding this session's policy
+        again for the same chunk would double-count every observation --
+        so policy feedback is opt-in here (two-sided masters opt in: their
+        workers carry no policy at all).
+        """
+        if feed_policy:
+            self._feed_policy(pe, iters, seconds, sched_seconds)
+        self._log_metrics(pe, iters, seconds, sched_seconds, claim,
+                          t_start, t_end)
+
+    def _feed_policy(self, pe: int, iters: int, seconds: float,
+                     sched_seconds: float) -> None:
         if self._record_style == "positional":
             self.policy.record(pe, iters, seconds, sched_seconds)
         elif self._record_style == "keyword":
             self.policy.record(pe, iters, seconds, sched_seconds=sched_seconds)
         else:  # legacy 3-argument policies
             self.policy.record(pe, iters, seconds)
+
+    def _log_metrics(self, pe, iters, seconds, sched_seconds, claim,
+                     t_start, t_end) -> None:
         if self.record_metrics:
             self._ensure_pe(pe)
             self._busy[pe] += seconds
@@ -223,8 +251,11 @@ class DLSession:
 
         executor: "serial" (round-robin claims on the calling thread),
         "threads" (real concurrency; two-sided runs the non-dedicated
-        master-worker protocol), or "sim" (discrete-event simulation --
-        pass ``costs=`` and ``speeds=`` instead of executing ``work_fn``).
+        master-worker protocol), "processes" (one real OS process per PE
+        over a shared-memory window -- open the session with
+        ``window="shm"``; ``work_fn`` must be picklable under
+        spawn/forkserver), or "sim" (discrete-event simulation -- pass
+        ``costs=`` and ``speeds=`` instead of executing ``work_fn``).
         """
         from . import executors
 
@@ -320,6 +351,19 @@ class DLSession:
     def restore(self, st: dict) -> None:
         self.runtime.restore(st)
 
+    def close(self) -> None:
+        """Release window resources that own OS state (shared-memory slabs).
+
+        No-op for in-process windows.  Un-closed shm windows are reclaimed
+        on garbage collection; call this for deterministic teardown."""
+        win = getattr(self.runtime, "window", None)
+        wins = ([win.global_window, *win.local_windows]
+                if isinstance(win, HierarchicalWindow) else [win])
+        for w in wins:
+            fn = getattr(w, "close", None)
+            if fn is not None:
+                fn()
+
     def __enter__(self) -> "DLSession":
         return self
 
@@ -370,10 +414,13 @@ def loop(
         full predicted ranking) lands in ``SessionReport.auto_decision``.
     runtime: "one_sided" (paper protocol) | "two_sided" (master-worker) |
         "hierarchical" (two-level node/global scheduling; needs ``nodes=``).
-    window: "thread" | "kvstore" | "sim" | "auto" | a shared ``Window``
-        object | None (thread).  Ignored by two-sided runtimes; for
-        hierarchical runtimes this is the *global* level (or a ready
-        ``HierarchicalWindow``), node-local levels stay in-process.
+    window: "thread" | "shm" | "kvstore" | "sim" | "auto" | a shared
+        ``Window`` object | None (thread).  "shm" is the real
+        cross-process backend (``repro.pt``) the ``processes`` executor
+        requires.  Ignored by two-sided runtimes; for hierarchical
+        runtimes this is the *global* level (or a ready
+        ``HierarchicalWindow``) and node-local levels stay in-process --
+        except "shm", which builds shared-memory slabs at *both* levels.
     weights: None/"uniform" | an adaptive policy name ("awf", "af",
         "awf_b".."awf_e") | a float sequence (static WF; also stored on
         the spec) | a ``WeightBoard`` | a ``WeightPolicy``.  Adaptive

@@ -1,0 +1,29 @@
+"""repro.pt -- real cross-process passive-target execution.
+
+The first execution substrate in this repo that is neither fake-parallel
+(threads under one GIL) nor simulated: a :class:`SharedMemWindow` lays the
+paper's RMA window out in ``multiprocessing.shared_memory`` so any OS
+process can attach it *by name* and issue atomic fetch-and-adds against it
+with no cycles on any other worker -- the passive-target property over
+``/dev/shm`` instead of MPI-3.  The ``processes`` executor
+(:func:`repro.pt.executor.execute_processes`, reached through
+``dls.loop(...).execute(work_fn, executor="processes")``) runs each PE as a
+real OS process driving the *existing* claim loops (one-sided, two-sided,
+hierarchical) against that window, with orphaned-chunk accounting when a
+worker dies.  ``pt.latency`` measures real per-RMW latency and contention
+scaling so ``replay.calibrate`` can be fed measured constants -- closing
+the reproduce-then-predict loop against real processes.
+
+Everything in this package is stdlib-only (no jax, no numpy in the hot
+path) and spawn-safe: workers re-import ``repro.pt.worker`` and rebuild
+state from picklable descriptors.  See DESIGN.md Sec. 11.
+"""
+from .window import SharedMemWindow, shm_hierarchical, hier_descriptor, attach_hier  # noqa: F401
+from .latency import measure_rmw_latency, measure_contention, RMWLatency  # noqa: F401
+from .executor import execute_processes  # noqa: F401
+
+__all__ = [
+    "SharedMemWindow", "shm_hierarchical", "hier_descriptor", "attach_hier",
+    "measure_rmw_latency", "measure_contention", "RMWLatency",
+    "execute_processes",
+]

@@ -117,13 +117,23 @@ class Calibration:
 
 def calibrate(trace, nodes: Optional[int] = None,
               inner_technique: Optional[str] = None,
-              seed: Optional[int] = None) -> Calibration:
+              seed: Optional[int] = None,
+              o_rma: Optional[float] = None,
+              o_rma_local: Optional[float] = None,
+              o_serve: Optional[float] = None) -> Calibration:
     """Fit DES parameters from a recorded trace (see module docstring).
 
     ``seed`` defaults to the trace's recorded seed (``meta["seed"]``) so
     adaptive-technique replays realize the *same* DES noise stream as the
     native run -- the replay-same-(technique, runtime, seed) methodology
     of EXPERIMENTS.md Sec. 4.
+
+    ``o_rma``/``o_rma_local``/``o_serve`` override the latency-fitted
+    service times with *directly measured* constants -- e.g. from
+    ``repro.pt.latency.measure_rmw_latency`` against the real
+    shared-memory window (``benchmarks/pt_contention.py``).  A measured
+    service time beats the moment estimator whenever you have one: the
+    minimum-latency fit conflates the RMW with wire/calculation residue.
     """
     tr: Trace = load_trace(trace)
     if not tr.records:
@@ -177,19 +187,27 @@ def calibrate(trace, nodes: Optional[int] = None,
     t_calc = d["t_calc"].default
     o_req_net = d["o_req_net"].default
     o_issue = d["o_issue"].default
-    o_rma = d["o_rma"].default
-    o_rma_local = d["o_rma_local"].default
-    o_serve = d["o_serve"].default
+    # a caller-measured constant wins over the latency fit for that param
+    fit_rma, fit_rma_local, fit_serve = (
+        o_rma is None, o_rma_local is None, o_serve is None)
+    if fit_rma:
+        o_rma = d["o_rma"].default
+    if fit_rma_local:
+        o_rma_local = d["o_rma_local"].default
+    if fit_serve:
+        o_serve = d["o_serve"].default
     if lat_min > 0:
         if tr.runtime == "two_sided":
             # Two-sided latency clocks from request *issue* (unlike
             # one-sided, which clocks after the issue cost is paid), so the
             # origin-side o_issue must come off before the serve time.
-            o_serve = max(lat_min - o_req_net - o_issue, _MIN_SERVICE)
+            if fit_serve:
+                o_serve = max(lat_min - o_req_net - o_issue, _MIN_SERVICE)
         elif tr.runtime == "hierarchical":
             # inner claims dominate the record stream; both RMWs are local
-            o_rma_local = max(lat_min / 2.0, _MIN_SERVICE)
-        else:
+            if fit_rma_local:
+                o_rma_local = max(lat_min / 2.0, _MIN_SERVICE)
+        elif fit_rma:
             o_rma = max((lat_min - 2.0 * o_claim_net - t_calc) / 2.0,
                         _MIN_SERVICE)
 

@@ -94,6 +94,48 @@ def test_concurrent_claims_with_contention_partition():
     assert (hits == 1).all()
 
 
+def test_real_process_killed_mid_chunk_survivors_reclaim():
+    """A real OS worker dies (``os._exit``) mid-chunk: the parent salvages
+    the executed prefix from the crash slot, orphans the remainder, and a
+    survivor re-executes it -- conservation holds to exactly N."""
+    import functools
+
+    from repro.pt import SharedMemWindow, workloads
+
+    if not SharedMemWindow.available():
+        import pytest
+
+        pytest.skip("SharedMemWindow unavailable: "
+                    + SharedMemWindow.availability()[1])
+    N, P = 400, 4
+    shm, name = workloads.alloc_hits(N)
+    try:
+        session = dls.loop(N, technique="fac2", P=P, window="shm")
+        # PE 1 dies on its 2nd sub-block: mid-chunk (batch-0 chunks span
+        # several 16-iteration sub-blocks), so salvage AND orphaning run
+        report = session.execute(
+            functools.partial(workloads.die_at, name, 1, 1, 200.0),
+            executor="processes", timeout=120.0, progress=16)
+        hits = workloads.read_hits(name, N)
+        missed = [i for i, h in enumerate(hits) if h != 1]
+        assert not missed, f"not executed exactly once: {missed[:10]}"
+        assert report.total_iters == N
+        ps = report.process_stats
+        assert ps["n_deaths"] == 1
+        victim = next(e for e in ps["per_pe"] if e.get("died"))
+        assert victim["pe"] == 1 and victim["exitcode"] == 77
+        assert victim["salvaged_iters"] == 16  # exactly one sub-block ran
+        assert victim["orphaned_iters"] > 0
+        # the orphan log pairs the dead PE with a surviving executor
+        assert sum(o["size"] for o in ps["orphans"]) == victim["orphaned_iters"]
+        assert all(o["from_pe"] == 1 and o["by_pe"] != 1
+                   for o in ps["orphans"])
+        session.close()
+    finally:
+        shm.close()
+        shm.unlink()
+
+
 def test_awf_demotes_straggler_then_recovers():
     """A host that slows down gets smaller chunks; recovery restores them."""
     from repro.core.weights import WeightBoard

@@ -40,9 +40,9 @@ print(f"KVSTORE_OK claims={session.report().steps}")
 def test_kvstore_window_real_coordination_service():
     from repro.core.rma import KVStoreWindow
 
-    if not KVStoreWindow.available():
-        pytest.skip("jax coordination client has no key_value_increment "
-                    "(atomic fetch-add): KVStoreWindow unavailable")
+    ok, reason = KVStoreWindow.availability()
+    if not ok:
+        pytest.skip(f"KVStoreWindow unavailable: {reason}")
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
         timeout=300, cwd=REPO,

@@ -212,6 +212,19 @@ def test_calibration_carries_chunk_bounds_and_seed():
     assert calib.percent_error() < 5.0
 
 
+def test_calibrate_measured_constant_overrides():
+    """Directly measured service times (repro.pt.latency) must win over
+    the latency fit -- only the un-overridden params get fitted."""
+    trace, _ = _sim_trace(technique="fac2")
+    fitted = calibrate(trace)
+    cal = calibrate(trace, o_rma=3.3e-6, o_serve=7.7e-6)
+    assert cal.o_rma == 3.3e-6
+    assert cal.o_serve == 7.7e-6
+    assert cal.o_rma_local == fitted.o_rma_local  # still fitted
+    cf = cal.sim_config()
+    assert cf.o_rma == 3.3e-6  # flows into the replayed DES
+
+
 def test_empty_costs_hint_rejected():
     with pytest.raises(ValueError, match="empty"):
         dls.loop(100, technique="auto", P=2, costs=[])
