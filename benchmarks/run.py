@@ -56,6 +56,12 @@ def _sim_sweep(quick: bool) -> None:
     sim_sweep.main(quick=quick)
 
 
+def _sim_fast(quick: bool) -> None:
+    from benchmarks import sim_fast
+
+    sim_fast.main(quick=quick)
+
+
 def _kernels(quick: bool) -> None:
     from benchmarks import kernels_bench
 
@@ -97,6 +103,9 @@ BENCHMARKS = (
     ("sim_sweep",
      "Batched sweeps: serial vs simulate_many on the predict roster",
      _sim_sweep),
+    ("sim_fast",
+     "Vectorized DES fast path vs event kernel (>=10x contended pin)",
+     _sim_fast),
     ("kernels", "Kernels (interpret mode; see header caveat)", _kernels),
     ("pt_contention",
      "pt: measured RMW latency / contention + DES prediction pin",

@@ -1,0 +1,97 @@
+"""Vectorized DES fast path: speedup over the event kernel.
+
+The regime the batch round targets is the paper's own stress case: a
+window-bound non-adaptive loop where every PE's next claim is queued
+behind a deep FIFO backlog (self-scheduling with fine-grained chunks,
+deterministic polling).  There the kernel pays per-event heap churn for
+every grant while ``repro.sim.fast`` serves whole backlogs as one numpy
+round -- results stay byte-identical (pinned by
+``tests/test_sim_fast.py``), only wall-clock moves.
+
+Reported per PE count: kernel and fast wall time (best of 3) and the
+speedup; then the end-to-end effect on a ``replay.sweep`` roster
+(``engine="kernel"`` vs ``engine="auto"``).  The P=1024 contended case
+asserts the >= 10x floor claimed in DESIGN.md Sec. 12 -- a regression
+there should fail the benchmark run loudly.
+
+Run:  PYTHONPATH=src python benchmarks/sim_fast.py [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.chunk_calculus import LoopSpec
+from repro.core.sim import SimConfig
+from repro.sim import simulate
+
+#: The asserted floor for the contended P=1024 case (DESIGN.md Sec. 12).
+SPEEDUP_FLOOR = 10.0
+
+
+def contended_config(P: int, N: int, seed: int = 7) -> SimConfig:
+    """Window-bound self-scheduling: constant tiny costs, FIFO polling."""
+    rng = np.random.default_rng(seed)
+    return SimConfig(LoopSpec("ss", N=N, P=P),
+                     rng.uniform(0.25, 1.0, size=P),
+                     np.full(N, 1e-5), impl="one_sided", seed=seed,
+                     lock_polling_random=False, collect_trace=False)
+
+
+def best_of(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep_leg(quick: bool) -> tuple:
+    """One calibrated selection sweep, kernel-only vs auto-routed."""
+    from repro.replay.select import choose_technique
+
+    N, P = (60_000, 128) if quick else (200_000, 512)
+    rng = np.random.default_rng(3)
+    costs = rng.lognormal(np.log(1e-4), 0.4, size=N)
+    t0 = time.perf_counter()
+    choose_technique(N, P, costs=costs, seed=3, budget_s=None,
+                     max_sim_iters=N, workers=1, engine="kernel")
+    t_kernel = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    dec = choose_technique(N, P, costs=costs, seed=3, budget_s=None,
+                           max_sim_iters=N, workers=1, engine="auto")
+    return t_kernel, time.perf_counter() - t0, dec["chosen"]
+
+
+def main(quick: bool = True) -> None:
+    grid = ((64, 20_000), (288, 60_000), (1024, 200_000)) if quick else \
+        ((64, 20_000), (288, 60_000), (1024, 200_000), (4096, 400_000))
+    print("name,us_per_call,derived")
+    floor_ok = None
+    for P, N in grid:
+        cf = contended_config(P, N)
+        t_k = best_of(lambda: simulate(cf, engine="kernel"))
+        t_f = best_of(lambda: simulate(cf, engine="fast"))
+        speedup = t_k / t_f
+        print(f"sim_fast_P{P},{t_f * 1e6:.0f},"
+              f"kernel_ms={t_k * 1e3:.0f} fast_ms={t_f * 1e3:.0f} "
+              f"speedup={speedup:.1f}x N={N}")
+        if P == 1024:
+            floor_ok = speedup
+    t_kernel, t_auto, chosen = sweep_leg(quick)
+    print(f"sim_fast_sweep,{t_auto * 1e6:.0f},"
+          f"kernel_s={t_kernel:.2f} auto_s={t_auto:.2f} "
+          f"speedup={t_kernel / t_auto:.1f}x chosen={chosen}")
+    assert floor_ok is not None and floor_ok >= SPEEDUP_FLOOR, (
+        f"contended P=1024 speedup {floor_ok:.1f}x fell below the "
+        f"{SPEEDUP_FLOOR:.0f}x floor (DESIGN.md Sec. 12)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    main(quick=not args.full)

@@ -10,12 +10,17 @@ from the pre-refactor triplicated event loops (``core/sim.py`` before
 the ``repro.sim`` unification) and are the byte-identity contract the
 unified kernel is pinned against (``tests/test_sim_equivalence.py``).
 Re-running this script must therefore be a **no-op** on a healthy tree:
-``--check`` (also run by the CI ``sim-equivalence`` job) fails if the
-current simulator drifts from the frozen streams.
+``--check`` (also run by the CI ``sim-equivalence`` and ``sim-fast``
+jobs) fails if the current simulator drifts from the frozen streams.
+``--check`` also re-runs every golden case that qualifies for the
+vectorized fast path (trace collection off) through ``repro.sim.fast``
+and demands byte-identity with the kernel -- the fixture file pins the
+kernel, and this leg transitively pins the fast path to it.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import pathlib
 import sys
@@ -26,6 +31,7 @@ sys.path.insert(0, str(ROOT / "tests"))
 
 import _sim_golden_cases as gc  # noqa: E402
 from repro.core.sim import simulate  # noqa: E402
+from repro.sim import fast_qualifies, simulate_fast  # noqa: E402
 
 FIXTURE_PATH = ROOT / "tests" / "fixtures" / gc.FIXTURE_NAME
 
@@ -36,6 +42,25 @@ def capture() -> dict:
         r = simulate(gc.build_config(case))
         entries.append({"case": case, "result": gc.encode_result(r)})
     return {"version": gc.FIXTURE_VERSION, "cases": entries}
+
+
+def check_fast() -> list:
+    """Differential leg: fast path vs kernel on the qualifying grid."""
+    bad = []
+    n = 0
+    for case in gc.cases():
+        cf = dataclasses.replace(gc.build_config(case), collect_trace=False)
+        if not fast_qualifies(cf):
+            continue
+        n += 1
+        rk = json.dumps(gc.encode_result(simulate(cf, engine="kernel")),
+                        sort_keys=True)
+        rf = json.dumps(gc.encode_result(simulate_fast(cf)), sort_keys=True)
+        if rk != rf:
+            bad.append(case["key"])
+    print(f"fast-path differential: {n - len(bad)}/{n} qualifying "
+          "cases byte-identical")
+    return bad
 
 
 def main() -> int:
@@ -55,6 +80,10 @@ def main() -> int:
             print(f"DRIFT in {len(bad)} golden case(s): {bad}")
             return 1
         print(f"{len(data['cases'])} golden cases match {FIXTURE_PATH}")
+        bad_fast = check_fast()
+        if bad_fast:
+            print(f"FAST-PATH DRIFT in {len(bad_fast)} case(s): {bad_fast}")
+            return 1
         return 0
     FIXTURE_PATH.parent.mkdir(parents=True, exist_ok=True)
     FIXTURE_PATH.write_text(text + "\n")

@@ -155,21 +155,30 @@ class SimResult:
         )
 
 
-def simulate(cf: SimConfig) -> SimResult:
-    """Run one configuration through the unified event kernel."""
+def simulate(cf: SimConfig, engine: str = "auto",
+             backend: str = "numpy") -> SimResult:
+    """Run one configuration through the unified DES.
+
+    ``engine="auto"`` routes qualifying configs (non-adaptive,
+    unperturbed, no trace) to the vectorized fast path
+    (``repro.sim.fast``) and everything else to the event kernel;
+    ``"kernel"``/``"fast"`` force a side.  Routing never changes
+    results -- the two are equivalence-pinned (``tests/test_sim_fast.py``).
+    """
     from repro.sim.run import simulate as _simulate
 
-    return _simulate(cf)
+    return _simulate(cf, engine=engine, backend=backend)
 
 
 def simulate_many(configs: Sequence[SimConfig], workers=None,
-                  budget_s: Optional[float] = None) -> List[SimResult]:
+                  budget_s: Optional[float] = None,
+                  engine: str = "auto") -> List[SimResult]:
     """Batched sweep over many configurations (``repro.sim.batch``):
     process-pool fan-out with fork-shared cost arrays; results align with
     ``configs`` (None where a wall-clock budget dropped a candidate)."""
     from repro.sim.batch import simulate_many as _many
 
-    return _many(configs, workers=workers, budget_s=budget_s)
+    return _many(configs, workers=workers, budget_s=budget_s, engine=engine)
 
 
 # ---------------------------------------------------------------------------

@@ -404,6 +404,7 @@ def loop(
     auto_seed: int = 0,
     auto_budget_s: Optional[float] = 2.0,
     auto_workers=None,
+    auto_engine: str = "auto",
 ) -> DLSession:
     """Open a DLS session over ``[0, N)`` -- the facade's front door.
 
@@ -441,6 +442,11 @@ def loop(
         seconds (None = unbounded), and the ``simulate_many`` worker
         knob for the candidate sweep (None = adaptive process fan-out).
         See DESIGN.md Sec. 9-10.
+    auto_engine: DES execution strategy for the selection sweep
+        ("auto" routes non-adaptive candidates through the vectorized
+        fast path, DESIGN.md Sec. 12; "kernel" forces the event
+        kernel).  Either way the ranking is identical -- the routes are
+        equivalence-pinned.
     """
     auto_decision = None
     if technique == "auto":
@@ -450,7 +456,8 @@ def loop(
             N=N, P=P, runtime=runtime, nodes=nodes,
             inner_technique=inner_technique, costs=costs, speeds=speeds,
             trace=trace, min_chunk=min_chunk, max_chunk=max_chunk,
-            seed=auto_seed, budget_s=auto_budget_s, workers=auto_workers)
+            seed=auto_seed, budget_s=auto_budget_s, workers=auto_workers,
+            engine=auto_engine)
         technique = auto_decision["chosen"]
     elif costs is not None or speeds is not None or trace is not None:
         warnings.warn(

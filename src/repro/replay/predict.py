@@ -76,6 +76,7 @@ def sweep(
     min_chunk: Optional[int] = None,  # None = the calibration's bounds
     max_chunk: Optional[int] = ...,
     workers=None,
+    engine: str = "auto",
 ) -> List[Prediction]:
     """Simulate every candidate; return predictions sorted by ``T_loop``.
 
@@ -85,7 +86,11 @@ def sweep(
     finish in time are dropped, >= 1 is always evaluated;
     ``max_sim_iters`` caps the simulated iterations per candidate via
     strided subsampling; ``workers`` is ``simulate_many``'s knob
-    (None = adaptive, "auto" = all cores, <=1 = serial).
+    (None = adaptive, "auto" = all cores, <=1 = serial); ``engine``
+    picks the per-candidate execution strategy ("auto" routes
+    qualifying non-adaptive candidates to the vectorized fast path --
+    routing never changes the ranking because fast and kernel results
+    are equivalence-pinned).
     """
     techniques = tuple(techniques) if techniques else TECHNIQUES
     runtimes = tuple(runtimes) if runtimes else (calib.runtime,)
@@ -99,7 +104,8 @@ def sweep(
                                 costs=costs, min_chunk=min_chunk,
                                 max_chunk=max_chunk)
                for rt, tech in candidates]
-    results = simulate_many(configs, workers=workers, budget_s=budget_s)
+    results = simulate_many(configs, workers=workers, budget_s=budget_s,
+                            engine=engine)
     out = [Prediction(technique=tech, runtime=rt, T_loop=float(r.T_loop),
                       cov=float(r.cov), steps=int(r.n_claims), scale=scale)
            for (rt, tech), r in zip(candidates, results) if r is not None]
@@ -116,6 +122,7 @@ def predict(
     budget_s: Optional[float] = None,
     max_sim_iters: Optional[int] = None,
     workers=None,
+    engine: str = "auto",
 ) -> dict:
     """Calibrate a trace, sweep candidates, and report the ranking.
 
@@ -129,7 +136,7 @@ def predict(
     err = calib.percent_error()
     ranking = sweep(calib, techniques, runtimes, seed=seed,
                     budget_s=budget_s, max_sim_iters=max_sim_iters,
-                    workers=workers)
+                    workers=workers, engine=engine)
     return {"calibration": calib, "percent_error": err, "ranking": ranking}
 
 

@@ -81,16 +81,20 @@ def choose_technique(
     max_sim_iters: int = MAX_SIM_ITERS,
     techniques=None,
     workers=None,
+    engine: str = "auto",
 ) -> dict:
     """The calibrated selection sweep behind ``technique="auto"``.
 
     The candidate roster runs through ``repro.sim.simulate_many``
     (``workers=None`` adapts: the default subsampled sweep stays
     in-process, full-workload sweeps fan out over a process pool --
-    rankings are identical either way).  Returns the decision record:
+    rankings are identical either way).  ``engine`` is forwarded per
+    candidate ("auto" routes non-adaptive candidates to the vectorized
+    fast path; fast/kernel equivalence pinning keeps the ranking
+    independent of the route taken).  Returns the decision record:
     ``chosen`` (argmin predicted T_loop), the full ``ranking``, and the
-    provenance (source, seed, budget, simulated-N) -- everything needed
-    to audit the choice later.
+    provenance (source, seed, budget, simulated-N, engine) --
+    everything needed to audit the choice later.
     """
     c, s, source, base = _workload(N, P, costs, speeds, trace, seed)
     if len(s) != P:
@@ -123,7 +127,7 @@ def choose_technique(
     ranking = sweep(calib, techniques=techniques or TECHNIQUES,
                     runtimes=(runtime,), seed=seed, budget_s=budget_s,
                     min_chunk=min_chunk, max_chunk=max_chunk,
-                    workers=workers)
+                    workers=workers, engine=engine)
     return {
         "chosen": ranking[0].technique,
         "runtime": runtime,
@@ -131,6 +135,7 @@ def choose_technique(
         "source": source,
         "seed": seed,
         "budget_s": budget_s,
+        "engine": engine,
         "N_sim": len(c_sim),
         "n_candidates": len(TECHNIQUES if techniques is None
                             else tuple(techniques)),

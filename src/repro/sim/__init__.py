@@ -10,6 +10,8 @@ Layers:
 
   kernel        -- EventQueue, Resource (serialization points), Engine
   one_sided / two_sided / hierarchical -- the topology engines
+  fast          -- vectorized fast path for non-adaptive, unperturbed
+                   one-sided/hierarchical runs (DESIGN.md Sec. 12)
   telemetry     -- shared adaptive-technique noise/lag front end
   perturb       -- PE failure/churn, stragglers, speed drift scenarios
   batch         -- ``simulate_many`` process-pool prediction sweeps
@@ -20,6 +22,7 @@ streams are pinned byte-identical to the pre-refactor implementations
 by ``tests/test_sim_equivalence.py``.
 """
 from .batch import resolve_workers, simulate_many  # noqa: F401
+from .fast import fast_qualifies, simulate_fast  # noqa: F401
 from .kernel import Engine, EventQueue, Resource  # noqa: F401
 from .perturb import (  # noqa: F401
     PEFailure,

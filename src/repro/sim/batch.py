@@ -31,15 +31,17 @@ from .run import simulate
 
 # Worker-side shared state, installed once per pool worker (fork: COW).
 _SHARED_CONFIGS: Optional[list] = None
+_SHARED_ENGINE: str = "auto"
 
 
-def _pool_init(configs: list) -> None:
-    global _SHARED_CONFIGS
+def _pool_init(configs: list, engine: str = "auto") -> None:
+    global _SHARED_CONFIGS, _SHARED_ENGINE
     _SHARED_CONFIGS = configs
+    _SHARED_ENGINE = engine
 
 
 def _pool_run(i: int):
-    return simulate(_SHARED_CONFIGS[i])
+    return simulate(_SHARED_CONFIGS[i], engine=_SHARED_ENGINE)
 
 
 def _pool_context(explicit: bool):
@@ -79,27 +81,38 @@ def _pool_context(explicit: bool):
 #: "auto"`` subsamples to ~4k iterations/candidate) stay in-process.
 PARALLEL_MIN_ITERS = 500_000
 
+#: Pool-startup amortization bound for the adaptive default: spinning a
+#: process pool up costs a few hundred ms, so an adaptive sweep whose
+#: wall-clock budget is below this can only lose by fanning out.
+POOL_STARTUP_S = 0.5
+
 
 def resolve_workers(workers: Union[int, str, None], n_tasks: int,
-                    total_iters: int = 0) -> int:
+                    total_iters: int = 0,
+                    budget_s: Optional[float] = None) -> int:
     """Effective worker count.
 
-    "auto" fills the machine (capped at the task count); None is the
-    adaptive default: fill the machine only when the batch is big enough
-    (``PARALLEL_MIN_ITERS`` simulated iterations) to amortize pool
-    startup, else run serial; <=1 forces serial.
+    "auto" fills the machine (capped at the task count).  None is the
+    adaptive default: fill the machine only when the batch is big
+    enough (``PARALLEL_MIN_ITERS`` simulated iterations) *and* any
+    wall-clock budget is large enough (``POOL_STARTUP_S``) to amortize
+    pool startup, else run serial.  <=1 forces serial.  An explicit
+    int or "auto" bypasses both adaptive guards.
     """
     if workers is None:
         if total_iters < PARALLEL_MIN_ITERS:
             return 1
-        workers = os.cpu_count() or 1
-    elif workers == "auto":
+        if budget_s is not None and budget_s < POOL_STARTUP_S:
+            return 1
+        workers = "auto"
+    if workers == "auto":
         workers = os.cpu_count() or 1
     return max(min(int(workers), n_tasks), 1)
 
 
 def simulate_many(configs: Sequence, workers: Union[int, str, None] = None,
-                  budget_s: Optional[float] = None) -> List:
+                  budget_s: Optional[float] = None,
+                  engine: str = "auto") -> List:
     """Simulate every config; returns results aligned with ``configs``.
 
     workers: None = adaptive (process pool when the batch is big enough
@@ -111,28 +124,34 @@ def simulate_many(configs: Sequence, workers: Union[int, str, None] = None,
         abandoned to finish in the background.  Either way the first
         config is always evaluated, and dropped candidates are ``None``
         in the result.
+    engine: per-config execution strategy, passed through to
+        ``simulate`` ("auto" routes qualifying configs to the
+        vectorized fast path; routing never changes results).
     """
     configs = list(configs)
     results: List = [None] * len(configs)
     if not configs:
         return results
     n = resolve_workers(workers, len(configs),
-                        sum(cf.spec.N for cf in configs))
+                        sum(cf.spec.N for cf in configs), budget_s=budget_s)
     if n <= 1 or len(configs) == 1:
         deadline = None if budget_s is None else time.monotonic() + budget_s
         for i, cf in enumerate(configs):
             if i and deadline is not None and time.monotonic() > deadline:
                 break  # budget spent: keep what's already evaluated
-            results[i] = simulate(cf)
+            results[i] = simulate(cf, engine=engine)
         return results
     ctx = _pool_context(explicit=workers is not None)
     if ctx is None:
-        return simulate_many(configs, workers=1, budget_s=budget_s)
+        return simulate_many(configs, workers=1, budget_s=budget_s,
+                             engine=engine)
     try:
         ex = ProcessPoolExecutor(max_workers=n, mp_context=ctx,
-                                 initializer=_pool_init, initargs=(configs,))
+                                 initializer=_pool_init,
+                                 initargs=(configs, engine))
     except (OSError, PermissionError):  # no subprocesses: degrade to serial
-        return simulate_many(configs, workers=1, budget_s=budget_s)
+        return simulate_many(configs, workers=1, budget_s=budget_s,
+                             engine=engine)
     # The budget clock covers the whole sweep, first candidate included
     # (like the serial branch -- candidate 0 is merely exempt from being
     # dropped, not from being timed).
@@ -145,7 +164,8 @@ def simulate_many(configs: Sequence, workers: Union[int, str, None] = None,
         wait(futs, timeout=timeout)
     except BrokenProcessPool:  # workers died (sandbox, OOM): go serial
         ex.shutdown(wait=False, cancel_futures=True)
-        return simulate_many(configs, workers=1, budget_s=budget_s)
+        return simulate_many(configs, workers=1, budget_s=budget_s,
+                             engine=engine)
     # Snapshot what finished inside the budget *before* shutdown: running
     # candidates cannot be interrupted, so on a blown budget they are
     # abandoned (shutdown(wait=False) -- they burn down in the background)

@@ -14,13 +14,18 @@ Also pinned here: ``simulate_many`` returns exactly what serial
 change results), and its budget semantics keep at least the first
 candidate.
 """
+import dataclasses
 import json
+import os
 import pathlib
 
 import pytest
 
 import _sim_golden_cases as gc
 from repro.core.sim import simulate, simulate_many
+from repro.sim import fast_qualifies
+from repro.sim.batch import (PARALLEL_MIN_ITERS, POOL_STARTUP_S,
+                             resolve_workers)
 
 FIXTURE_PATH = pathlib.Path(__file__).parent / "fixtures" / gc.FIXTURE_NAME
 
@@ -94,3 +99,65 @@ def test_simulate_many_empty_and_single():
     (r,) = simulate_many([cf], workers="auto")
     assert json.dumps(gc.encode_result(r), sort_keys=True) == \
         json.dumps(gc.encode_result(simulate(cf)), sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# engine routing: "auto" never changes what a non-qualifying config runs on
+# ---------------------------------------------------------------------------
+
+
+def test_auto_routes_non_qualifying_to_kernel(golden):
+    """Golden cases collect traces, so none qualify for the fast path:
+    ``engine="auto"`` must still reproduce the pinned stream exactly."""
+    for key in _KEYS[::6]:  # a spread of the grid, not the whole rerun
+        entry = golden[key]
+        cf = gc.build_config(entry["case"])
+        assert not fast_qualifies(cf)
+        fresh = json.dumps(gc.encode_result(simulate(cf, engine="auto")),
+                           sort_keys=True)
+        assert fresh == json.dumps(entry["result"], sort_keys=True), key
+
+
+def test_fast_qualifies_predicate():
+    """Each disqualifier flips the routing predicate on its own."""
+    base = dataclasses.replace(gc.build_config(gc.cases()[0]),
+                               collect_trace=False)
+    assert base.impl == "one_sided"
+    assert fast_qualifies(base)
+    assert not fast_qualifies(dataclasses.replace(base, impl="two_sided"))
+    assert not fast_qualifies(dataclasses.replace(base, collect_trace=True))
+    assert not fast_qualifies(
+        dataclasses.replace(base, perturbations=[("die", 0, 0.0)]))
+    af = dataclasses.replace(
+        base, spec=dataclasses.replace(base.spec, technique="af"))
+    assert not fast_qualifies(af)
+    hier = dataclasses.replace(base, impl="hierarchical", nodes=2,
+                               inner_technique="ss")
+    assert fast_qualifies(hier)
+    assert not fast_qualifies(
+        dataclasses.replace(hier, inner_technique="awf_b"))
+
+
+# ---------------------------------------------------------------------------
+# resolve_workers: the adaptive default's decision matrix
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_workers_matrix():
+    cores = os.cpu_count() or 1
+    big = PARALLEL_MIN_ITERS  # at the threshold counts as big enough
+    # adaptive default: serial below the iteration floor ...
+    assert resolve_workers(None, 8, total_iters=big - 1) == 1
+    # ... parallel at/above it (capped by tasks and cores) ...
+    assert resolve_workers(None, 8, total_iters=big) == min(cores, 8)
+    # ... but never when the budget can't amortize pool startup
+    assert resolve_workers(None, 8, total_iters=big,
+                           budget_s=POOL_STARTUP_S / 2) == 1
+    assert resolve_workers(None, 8, total_iters=big,
+                           budget_s=POOL_STARTUP_S) == min(cores, 8)
+    # explicit requests bypass both adaptive guards
+    assert resolve_workers("auto", 8, total_iters=0) == min(cores, 8)
+    assert resolve_workers(6, 3, total_iters=0) == 3  # capped at tasks
+    assert resolve_workers(2, 8, total_iters=0) == 2
+    for serial in (0, 1, -3):
+        assert resolve_workers(serial, 8, total_iters=10 ** 9) == 1
