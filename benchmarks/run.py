@@ -74,6 +74,12 @@ def _pt_contention(quick: bool) -> None:
     pt_contention.main(quick=quick)
 
 
+def _serving_slo(quick: bool) -> None:
+    from benchmarks import serving_slo
+
+    serving_slo.main(quick=quick)
+
+
 def _roofline(quick: bool) -> None:
     try:
         from benchmarks import roofline
@@ -110,6 +116,9 @@ BENCHMARKS = (
     ("pt_contention",
      "pt: measured RMW latency / contention + DES prediction pin",
      _pt_contention),
+    ("serving_slo",
+     "Serving SLO: online re-selection vs fixed techniques under overload",
+     _serving_slo),
     ("roofline", "Roofline (from dry-run artifacts, if present)", _roofline),
 )
 

@@ -73,6 +73,13 @@ class SessionReport:
     # RMW counts, death/salvage/orphan accounting), and the orphan
     # hand-off log.  None for in-process executors.
     process_stats: Optional[dict] = None
+    # Serving scenarios only (repro.serve.scenarios): the SLO slice this
+    # session (= one admission epoch) contributed -- an ``SLOReport``
+    # dict -- and the online re-selection decisions taken at this
+    # epoch's boundary (full predicted ranking included).  None outside
+    # the serving plane.
+    slo: Optional[dict] = None
+    reselections: Optional[List[dict]] = None
 
     @property
     def claims(self) -> List[Claim]:
@@ -160,6 +167,8 @@ class SessionReport:
             "chunk_times": self.chunk_times,
             "auto_decision": self.auto_decision,
             "process_stats": self.process_stats,
+            "slo": self.slo,
+            "reselections": self.reselections,
         }
 
     def to_json(self, indent: Optional[int] = None) -> str:
@@ -196,6 +205,8 @@ class SessionReport:
             chunk_times=d.get("chunk_times"),
             auto_decision=d.get("auto_decision"),
             process_stats=d.get("process_stats"),
+            slo=d.get("slo"),
+            reselections=d.get("reselections"),
         )
 
     @classmethod

@@ -122,6 +122,37 @@ class Trace:
     def claim_latencies(self) -> np.ndarray:
         return np.array([r.lat for r in self.records], dtype=np.float64)
 
+    def window(self, t_from: float, t_to: Optional[float] = None) -> "Trace":
+        """A sub-trace of the chunks live in ``[t_from, t_to)``.
+
+        Keeps every record that *finished* after ``t_from`` (and started
+        before ``t_to``, when given), rebasing timestamps so the window
+        opens at 0 -- the shape ``calibrate`` expects.  This is the
+        sliding-window view an online controller calibrates from: recent
+        chunks reflect the current cost/speed regime, chunks from ten
+        epochs ago may not.  ``N`` becomes the windowed iteration count
+        and ``wall_time`` the window span, so fitted speeds and
+        overheads come purely from live-window evidence.
+        """
+        recs = [r for r in self.records
+                if r.t1 > t_from and (t_to is None or r.t0 < t_to)]
+        rebased = [ChunkRecord(pe=r.pe, step=r.step, start=r.start,
+                               size=r.size, t0=r.t0 - t_from,
+                               t1=r.t1 - t_from, lat=r.lat) for r in recs]
+        if rebased:
+            span = max(r.t1 for r in rebased)
+        else:
+            span = 0.0
+        return Trace(technique=self.technique,
+                     N=max(sum(r.size for r in rebased), 1), P=self.P,
+                     runtime=self.runtime, executor=self.executor,
+                     wall_time=float(span), records=rebased,
+                     min_chunk=self.min_chunk, max_chunk=self.max_chunk,
+                     meta={**self.meta,
+                           "window": [float(t_from),
+                                      None if t_to is None else float(t_to)]},
+                     version=self.version)
+
     def summary(self) -> str:
         return (f"trace {self.technique} N={self.N} P={self.P} "
                 f"[{self.runtime}/{self.executor}] chunks={len(self.records)} "

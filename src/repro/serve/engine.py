@@ -125,9 +125,18 @@ class ContinuousBatcher:
                 # no probe claims that burn scheduling steps per worker.
                 break
             chunk = requests[c.start : c.stop]
+            t_start = float(t_worker[w])
             dt = process(chunk, w)
             t_worker[w] += dt
-            session.record(w, c.size, dt)
+            session.record(w, c.size, dt, claim=c, t_start=t_start,
+                           t_end=t_start + dt)
             done_at[c.start : c.stop] = t_worker[w]
+            for r in chunk:
+                # Closed-loop queue: every request is present at t=0.
+                # TTFT = the chunk's first token (its execution start),
+                # not chunk completion; the group finishes together.
+                r.t_submit = 0.0
+                r.t_first = t_start
+                r.t_done = t_start + dt
         self.last_report = session.report(executor="admission")
         return done_at

@@ -1,4 +1,6 @@
-"""Serving-engine correctness: batched generation and admission scheduling."""
+"""Serving-engine correctness: batched generation, admission scheduling,
+and the open-loop scenario suite (traffic -> SLO metrics -> online
+re-selection -> chaos), pinned by a deterministic regression grid."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,7 +8,19 @@ import pytest
 
 from repro.configs.base import ModelConfig
 from repro.models import api
-from repro.serve import ContinuousBatcher, Engine, Request
+from repro.serve import (
+    RESELECT_ROSTER,
+    SLO,
+    ContinuousBatcher,
+    Engine,
+    Request,
+    ScenarioReport,
+    ServeCostModel,
+    TenantClass,
+    generate_stream,
+    run_scenario,
+)
+from repro.sim import PEFailure, Straggler
 
 
 def _cfg():
@@ -61,6 +75,200 @@ def test_batcher_serves_every_request_once():
     done = cb.schedule(reqs, process)
     assert sorted(seen) == list(range(101))
     assert (done > 0).all()
+
+
+def test_batcher_populates_request_timing_fields():
+    """The once-dead ``t_submit``/``t_first``/``t_done`` fields are filled
+    from the simulated clock; TTFT is the chunk's first token, not its
+    completion."""
+    reqs = [Request(rid=i, prompt=np.zeros(4, np.int32)) for i in range(40)]
+    cb = ContinuousBatcher(n_workers=3, technique="gss")
+    done = cb.schedule(reqs, lambda chunk, w: 0.02 * len(chunk))
+    for i, r in enumerate(reqs):
+        assert r.t_submit == 0.0
+        assert r.t_submit <= r.t_first < r.t_done
+        assert r.t_done == pytest.approx(done[i])
+        # first token strictly precedes chunk completion (chunks are >= 1
+        # requests at 0.02 s each)
+        assert r.t_done - r.t_first >= 0.02 - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# open-loop scenario suite: deterministic regression grid
+# ---------------------------------------------------------------------------
+
+#: arrival pattern x technique (incl. auto) x chaos on/off
+SCENARIO_GRID = [
+    ("poisson", "gss", False),
+    ("poisson", "auto", False),
+    ("bursty", "fac2", True),
+    ("bursty", "auto", True),
+    ("diurnal", "tss", False),
+    ("diurnal", "static", True),
+]
+
+_CHAOS = (PEFailure(1, at=0.4), Straggler(2, at=0.2, factor=0.5))
+
+
+def _scenario(arrival, technique, chaos, *, n=80, seed=0):
+    stream = generate_stream(n, arrival=arrival, rate=25.0, seed=5,
+                             tenants=[TenantClass("free", 0.7, 0),
+                                      TenantClass("pro", 0.3, 2)])
+    return run_scenario(
+        stream, n_workers=4, technique=technique,
+        perturbations=_CHAOS if chaos else (),
+        reselect_every_s=0.5 if technique == "auto" else None,
+        seed=seed)
+
+
+@pytest.mark.parametrize("arrival,technique,chaos", SCENARIO_GRID)
+def test_scenario_exactly_once(arrival, technique, chaos):
+    """Every request completes exactly once -- through priority batches,
+    re-selection switches, and worker-death requeues alike."""
+    rep = _scenario(arrival, technique, chaos)
+    rids = [r["rid"] for r in rep.requests]
+    assert sorted(rids) == list(range(80))
+    assert rep.slo.n_completed == 80
+    for r in rep.requests:
+        assert r["t_submit"] <= r["t_first"] <= r["t_done"]
+    if chaos:
+        assert rep.chaos, "chaos scenario logged no events"
+
+
+@pytest.mark.parametrize("arrival,technique,chaos", SCENARIO_GRID)
+def test_scenario_report_deterministic(arrival, technique, chaos):
+    """Same stream + seed -> byte-identical scenario report JSON."""
+    a = _scenario(arrival, technique, chaos).to_json()
+    b = _scenario(arrival, technique, chaos).to_json()
+    assert a == b
+
+
+def test_scenario_report_roundtrip():
+    rep = _scenario("bursty", "auto", True)
+    back = ScenarioReport.from_json(rep.to_json())
+    assert back.to_json() == rep.to_json()
+    assert back.final_technique == rep.final_technique
+    with pytest.raises(ValueError):
+        ScenarioReport.from_dict({"schema_version": 999})
+
+
+def test_reselection_decisions_recorded_with_full_ranking():
+    rep = _scenario("poisson", "auto", False)
+    assert rep.reselections, "auto scenario recorded no decisions"
+    boot = rep.reselections[0]
+    assert boot["from"] == "auto" and boot["switched"]
+    for d in rep.reselections:
+        assert set(d) >= {"t", "epoch", "from", "to", "switched", "decision"}
+        ranking = d["decision"]["ranking"]
+        assert len(ranking) == len(RESELECT_ROSTER)
+        assert d["decision"]["chosen"] == ranking[0]["technique"]
+        assert d["to"] in RESELECT_ROSTER
+
+
+def test_priority_classes_shape_tenant_ttft():
+    """Under backlog, the high-priority tenant's median TTFT beats the
+    low-priority tenant's (priority-ordered admission)."""
+    cm = ServeCostModel(prefill_per_token=2e-5, tok_seconds=8e-4,
+                        sched_overhead=0.01)
+    stream = generate_stream(200, arrival="bursty", rate=80.0, seed=11,
+                             tenants=[TenantClass("free", 0.7, 0),
+                                      TenantClass("pro", 0.3, 5)])
+    rep = run_scenario(stream, n_workers=4, technique="gss",
+                       cost_model=cm, seed=0, keep_requests=False)
+    pt = rep.slo.per_tenant
+    assert pt["pro"]["ttft_p50"] < pt["free"]["ttft_p50"]
+
+
+def test_chaos_death_requeues_and_conserves():
+    """A worker dying mid-decode requeues its unfinished requests; they
+    still complete exactly once on the survivors, and the accounting
+    (chaos log, requeue counters, SLO plane) agrees."""
+    stream = generate_stream(120, arrival="poisson", rate=40.0, seed=3)
+    rep = run_scenario(stream, n_workers=4, technique="static",
+                       perturbations=(PEFailure(0, at=0.05),), seed=0)
+    assert sorted(r["rid"] for r in rep.requests) == list(range(120))
+    deaths = [e for e in rep.chaos if e["kind"] == "death"]
+    assert len(deaths) == 1 and deaths[0]["worker"] == 0
+    assert rep.n_requeued == deaths[0]["requeued"] > 0
+    assert rep.slo.n_requeued == sum(r["requeues"] for r in rep.requests)
+    # every surviving row ran on a surviving worker after the death
+    for r in rep.requests:
+        if r["requeues"]:
+            assert r["worker"] != 0
+
+
+def test_epoch_reports_carry_slo_and_reselections():
+    """Per-epoch ``SessionReport``s round-trip with the new ``slo`` +
+    ``reselections`` fields attached."""
+    from repro.dls import SessionReport
+    from repro.serve import SLOReport
+
+    rep = _scenario("bursty", "auto", False, n=60)
+    assert rep.epoch_reports is None  # off by default
+    rep = run_scenario(
+        generate_stream(60, arrival="bursty", rate=25.0, seed=5),
+        n_workers=4, technique="auto", reselect_every_s=0.5, seed=0,
+        keep_epoch_reports=True)
+    assert rep.epoch_reports
+    first = SessionReport.from_dict(rep.epoch_reports[0])
+    assert first.reselections and first.reselections[0]["from"] == "auto"
+    for d in rep.epoch_reports:
+        sr = SessionReport.from_dict(d)
+        if sr.slo is not None:
+            SLOReport.from_dict(sr.slo)  # valid versioned SLO slice
+
+
+def test_trace_window_rebases_and_calibrates():
+    """``Trace.window`` keeps only chunks live in the window, rebased to
+    t=0, and the windowed trace still calibrates."""
+    from repro.replay import ChunkRecord, Trace, calibrate
+
+    recs = [ChunkRecord(pe=i % 2, step=i, start=4 * i, size=4,
+                        t0=float(i), t1=float(i) + 0.9, lat=0.01)
+            for i in range(10)]
+    tr = Trace(technique="ss", N=40, P=2, runtime="one_sided",
+               executor="serve", wall_time=10.0, records=recs)
+    w = tr.window(5.0, 8.0)
+    assert len(w.records) == 3  # t1 > 5 and t0 < 8: chunks 5, 6, 7
+    assert w.records[0].t0 == pytest.approx(0.0)
+    assert w.N == sum(r.size for r in w.records)
+    assert w.meta["window"] == [5.0, 8.0]
+    calib = calibrate(w, seed=0)
+    assert calib.costs.shape == (w.N,)
+    assert tr.window(100.0).records == []
+
+
+def test_overload_reselection_beats_worst_fixed():
+    """THE acceptance pin: under seeded overload the online controller
+    switches technique mid-stream and beats the worst fixed technique on
+    both p99 TTFT and goodput (mirrored by benchmarks/serving_slo.py)."""
+    cm = ServeCostModel(prefill_per_token=2e-5, tok_seconds=8e-4,
+                        sched_overhead=0.03)
+    stream = generate_stream(300, arrival="bursty", rate=60.0, seed=7,
+                             max_new_tail=1.1, max_new_scale=20.0,
+                             max_new_cap=512)
+    slo = SLO(ttft_s=0.25)
+    fixed = {t: run_scenario(stream, n_workers=4, technique=t,
+                             cost_model=cm, slo=slo, seed=0,
+                             keep_requests=False)
+             for t in ("static", "ss", "gss", "fac2", "tss")}
+    auto = run_scenario(stream, n_workers=4, technique="auto",
+                        cost_model=cm, slo=slo, seed=0,
+                        reselect_every_s=1.0, keep_requests=False)
+
+    # the controller actually re-selected mid-stream (not just bootstrap)
+    assert auto.n_switches >= 1
+    mid = [d for d in auto.reselections if d["switched"] and d["t"] > 0.5]
+    assert mid, "no mid-stream switch"
+
+    worst = max(fixed.values(), key=lambda r: r.slo.ttft["p99"])
+    assert worst.technique == "ss"  # fine-grained claims drown in overhead
+    assert auto.slo.ttft["p99"] < worst.slo.ttft["p99"]
+    assert auto.slo.goodput_tokens_per_s > worst.slo.goodput_tokens_per_s
+    # pin the decision path: bootstrap adopts fac2, live trace exposes the
+    # claim overhead and the controller re-selects gss
+    assert auto.reselections[0]["to"] == "fac2"
+    assert mid[0]["to"] == "gss"
 
 
 def test_plan_jax_inside_jit():

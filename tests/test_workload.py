@@ -1,0 +1,261 @@
+"""Workload-generator + SLO-metrics properties (the serving data plane).
+
+Mirrors the ``test_invariants.py`` two-layer pattern: a deterministic
+seeded case grid that always runs, plus hypothesis fuzzing over the same
+properties when hypothesis is importable.  Properties:
+
+  * seeded streams are reproducible and byte-stable (write -> read ->
+    write identical);
+  * arrival times are strictly ordered with non-negative inter-arrivals,
+    for every arrival process;
+  * priority-class proportions match the tenant shares within tolerance;
+  * heavy-tail parameters are respected (``max_new`` within
+    [min, cap], prompt lengths >= 1);
+  * parameter validation rejects nonsense;
+  * the SLO plane computes what it claims (hand-checked queue depth /
+    goodput cases; canonical round trip).
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.serve import (
+    SLO,
+    RequestStream,
+    SLOReport,
+    TenantClass,
+    compute_slo,
+    generate_stream,
+)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised by the no-hypothesis CI job
+    HAVE_HYPOTHESIS = False
+
+ARRIVAL_CASES = ["poisson", "bursty", "diurnal"]
+
+
+# ---------------------------------------------------------------------------
+# shared checkers
+# ---------------------------------------------------------------------------
+
+
+def assert_stream_wellformed(stream, n, *, max_new_min=2, max_new_cap=256):
+    assert stream.n == n
+    t = stream.arrival_times()
+    assert (np.diff(t) >= 0).all(), "arrival times must be non-decreasing"
+    assert (stream.inter_arrivals() >= 0).all()
+    assert (t > 0).all()
+    for r in stream.requests:
+        assert r.prompt_len >= 1
+        assert max_new_min <= r.max_new <= max_new_cap
+    assert [r.rid for r in stream.requests] == list(range(n))
+
+
+def assert_byte_stable(stream):
+    text = stream.to_jsonl()
+    back = RequestStream.from_jsonl(text)
+    assert back.to_jsonl() == text, "write -> read -> write not byte-stable"
+    assert back.meta == stream.meta
+
+
+# ---------------------------------------------------------------------------
+# deterministic seeded grid (always runs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arrival", ARRIVAL_CASES)
+@pytest.mark.parametrize("seed", [0, 7])
+def test_stream_wellformed_and_stable(arrival, seed):
+    s = generate_stream(150, arrival=arrival, rate=12.0, seed=seed)
+    assert_stream_wellformed(s, 150)
+    assert_byte_stable(s)
+    again = generate_stream(150, arrival=arrival, rate=12.0, seed=seed)
+    assert again.to_jsonl() == s.to_jsonl(), "same seed, different bytes"
+
+
+def test_different_seeds_differ():
+    a = generate_stream(50, seed=0).to_jsonl()
+    b = generate_stream(50, seed=1).to_jsonl()
+    assert a != b
+
+
+def test_mean_rate_is_preserved_across_processes():
+    """Bursty/diurnal redistribute load in time but keep the long-run
+    mean rate; horizons agree with poisson within statistical slack."""
+    n, rate = 4000, 20.0
+    horizons = {a: generate_stream(n, arrival=a, rate=rate, seed=2).horizon
+                for a in ARRIVAL_CASES}
+    for a, h in horizons.items():
+        assert h == pytest.approx(n / rate, rel=0.15), (a, h)
+
+
+def test_bursty_concentrates_arrivals():
+    """The on-window of a bursty stream holds disproportionate traffic."""
+    s = generate_stream(3000, arrival="bursty", rate=10.0, seed=4,
+                        burst_factor=8.0, burst_on_s=2.0, burst_off_s=6.0)
+    t = s.arrival_times()
+    in_burst = ((t % 8.0) < 2.0).mean()
+    assert in_burst > 0.5  # 25% of the cycle carries most of the load
+
+
+def test_tenant_shares_within_tolerance():
+    tenants = [TenantClass("free", 0.6, 0), TenantClass("pro", 0.3, 1),
+               TenantClass("batch", 0.1, -1)]
+    s = generate_stream(3000, seed=9, tenants=tenants)
+    counts = s.tenant_counts()
+    for c in tenants:
+        assert counts[c.name] / s.n == pytest.approx(c.share / 1.0, abs=0.05)
+    by_name = {r.tenant: r.priority for r in s.requests}
+    assert by_name == {"free": 0, "pro": 1, "batch": -1}
+
+
+def test_heavy_tail_parameters_respected():
+    s = generate_stream(4000, seed=1, max_new_min=4, max_new_cap=128,
+                        max_new_tail=1.05, max_new_scale=10.0)
+    gen = np.array([r.max_new for r in s.requests])
+    assert gen.min() >= 4 and gen.max() <= 128
+    # tail index ~1: the cap is actually hit, and the distribution is
+    # right-skewed (mean well above median)
+    assert (gen == 128).sum() > 0
+    assert gen.mean() > 1.5 * np.median(gen)
+
+
+@pytest.mark.parametrize("kw", [
+    {"rate": 0.0}, {"rate": -1.0}, {"burst_factor": 0.5},
+    {"burst_on_s": 0.0}, {"diurnal_amplitude": 1.0},
+    {"diurnal_period_s": 0.0}, {"max_new_tail": 0.0},
+    {"max_new_min": 0}, {"max_new_min": 300, "max_new_cap": 256},
+    {"prompt_mean": 0.5}, {"prompt_cov": -0.1},
+    {"arrival": "weekly"},
+    {"tenants": [TenantClass("a", 0.0)]},
+])
+def test_generator_rejects_bad_params(kw):
+    with pytest.raises(ValueError):
+        generate_stream(10, **kw)
+
+
+def test_stream_rejects_newer_schema():
+    s = generate_stream(3, seed=0)
+    lines = s.to_jsonl().splitlines()
+    header = json.loads(lines[0])
+    header["version"] = 999
+    bad = "\n".join([json.dumps(header)] + lines[1:])
+    with pytest.raises(ValueError):
+        RequestStream.from_jsonl(bad)
+
+
+# ---------------------------------------------------------------------------
+# SLO metrics plane
+# ---------------------------------------------------------------------------
+
+
+def _row(rid, sub, first, done, tokens, tenant="default", requeues=0):
+    return {"rid": rid, "t_submit": sub, "t_first": first, "t_done": done,
+            "max_new": tokens, "tenant": tenant, "requeues": requeues}
+
+
+def test_queue_depth_hand_case():
+    """Two overlapping waits: depth 2 for 1 s, depth 1 for 2 s of a 4 s
+    horizon -> time-weighted mean 1.0, max 2."""
+    rows = [_row(0, 0.0, 3.0, 3.5, 10), _row(1, 1.0, 2.0, 2.5, 10)]
+    rep = compute_slo(rows, horizon=4.0)
+    assert rep.queue_depth["max"] == 2
+    assert rep.queue_depth["mean"] == pytest.approx(1.0)
+
+
+def test_goodput_counts_only_slo_met_tokens():
+    slo = SLO(ttft_s=0.5)
+    rows = [_row(0, 0.0, 0.1, 1.0, 30),  # TTFT 0.1 -> in SLO
+            _row(1, 0.0, 2.0, 3.0, 70)]  # TTFT 2.0 -> violated
+    rep = compute_slo(rows, slo=slo, horizon=10.0)
+    assert rep.tokens_per_s == pytest.approx(10.0)
+    assert rep.goodput_tokens_per_s == pytest.approx(3.0)
+    assert rep.slo_attainment == pytest.approx(0.5)
+
+
+def test_tpot_gate():
+    slo = SLO(ttft_s=10.0, tpot_s=0.01)
+    rows = [_row(0, 0.0, 0.1, 0.2, 100),  # 1 ms/token -> in SLO
+            _row(1, 0.0, 0.1, 5.1, 100)]  # 50 ms/token -> violated
+    rep = compute_slo(rows, slo=slo)
+    assert rep.slo_attainment == pytest.approx(0.5)
+
+
+def test_slo_report_roundtrip_and_version_gate():
+    rows = [_row(i, 0.1 * i, 0.1 * i + 0.05, 0.1 * i + 0.2, 8,
+                 tenant="t" + str(i % 2)) for i in range(20)]
+    rep = compute_slo(rows, n_submitted=25, horizon=3.0)
+    back = SLOReport.from_json(rep.to_json())
+    assert back.to_json() == rep.to_json()
+    assert back.n_submitted == 25 and back.n_completed == 20
+    assert set(back.per_tenant) == {"t0", "t1"}
+    d = rep.to_dict()
+    d["schema_version"] = 999
+    with pytest.raises(ValueError):
+        SLOReport.from_dict(d)
+
+
+def test_empty_slo_report():
+    rep = compute_slo([], n_submitted=0)
+    assert rep.slo_attainment == 0.0 and rep.ttft["p99"] == 0.0
+    assert math.isfinite(rep.goodput_tokens_per_s)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzz layer (when available)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(n=st.integers(0, 120),
+           arrival=st.sampled_from(ARRIVAL_CASES),
+           rate=st.floats(0.5, 100.0),
+           seed=st.integers(0, 2 ** 31 - 1),
+           tail=st.floats(0.3, 3.0),
+           cap=st.integers(8, 512))
+    def test_fuzz_stream_properties(n, arrival, rate, seed, tail, cap):
+        s = generate_stream(n, arrival=arrival, rate=rate, seed=seed,
+                            max_new_tail=tail, max_new_cap=cap)
+        assert_stream_wellformed(s, n, max_new_cap=cap)
+        assert_byte_stable(s)
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(shares=st.lists(st.floats(0.05, 1.0), min_size=1, max_size=4),
+           seed=st.integers(0, 2 ** 31 - 1))
+    def test_fuzz_tenant_proportions(shares, seed):
+        tenants = [TenantClass(f"t{i}", sh, i) for i, sh in enumerate(shares)]
+        s = generate_stream(1500, seed=seed, tenants=tenants)
+        counts = s.tenant_counts()
+        total = sum(shares)
+        for c in tenants:
+            got = counts.get(c.name, 0) / s.n
+            assert got == pytest.approx(c.share / total, abs=0.06)
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(
+        st.tuples(st.floats(0.0, 10.0),  # t_submit
+                  st.floats(0.0, 5.0),   # wait to first token
+                  st.floats(0.0, 5.0),   # decode span
+                  st.integers(1, 256)),  # tokens
+        min_size=1, max_size=40))
+    def test_fuzz_slo_report_consistency(items):
+        rows = [_row(i, a, a + w, a + w + d, k)
+                for i, (a, w, d, k) in enumerate(items)]
+        rep = compute_slo(rows)
+        assert 0.0 <= rep.slo_attainment <= 1.0
+        assert rep.goodput_tokens_per_s <= rep.tokens_per_s + 1e-9
+        assert rep.ttft["p50"] <= rep.ttft["p99"] <= rep.ttft["max"]
+        assert rep.queue_depth["max"] <= len(rows)
+        back = SLOReport.from_json(rep.to_json())
+        assert back.to_json() == rep.to_json()
