@@ -68,6 +68,12 @@ def _kernels(quick: bool) -> None:
     kernels_bench.main(quick=quick)
 
 
+def _kernels_selfsched(quick: bool) -> None:
+    from benchmarks import kernels_selfsched
+
+    kernels_selfsched.main(quick=quick)
+
+
 def _pt_contention(quick: bool) -> None:
     from benchmarks import pt_contention
 
@@ -113,6 +119,9 @@ BENCHMARKS = (
      "Vectorized DES fast path vs event kernel (>=10x contended pin)",
      _sim_fast),
     ("kernels", "Kernels (interpret mode; see header caveat)", _kernels),
+    ("kernels_selfsched",
+     "Self-scheduled persistent grids vs static (device window protocol)",
+     _kernels_selfsched),
     ("pt_contention",
      "pt: measured RMW latency / contention + DES prediction pin",
      _pt_contention),

@@ -387,6 +387,15 @@ def make_window(backend: str = "auto", **kw) -> Window:
         return SharedMemWindow.create(**kw)
     if backend == "sim":
         return SimWindow(**kw)
+    if backend == "device":
+        # counters in accelerator memory (jax device array slab); the
+        # backend the persistent-kernel protocol claims through
+        from repro.device.window import DeviceWindow
+
+        ok, reason = DeviceWindow.availability()
+        if not ok:
+            raise RuntimeError(f"DeviceWindow unavailable: {reason}")
+        return DeviceWindow(**kw)
     if backend == "auto":
         try:
             return KVStoreWindow(**kw)

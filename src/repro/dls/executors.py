@@ -12,6 +12,9 @@ Three built-ins, all draining a ``DLSession`` to completion and returning a
   * ``sim``     -- the discrete-event simulator (``core/sim.py``): no real
     execution; pass per-iteration ``costs`` and per-PE ``speeds``.  This is
     how the paper's heterogeneous-cluster experiments run.
+  * ``device``  -- the whole claim loop inside a persistent Pallas kernel
+    against a ``DeviceWindow`` slab (``repro.device``, DESIGN.md Sec. 14);
+    requires ``runtime="device"``.
 
 ``work_fn(start, stop)`` executes iterations ``[start, stop)``.  Executors
 time every chunk and feed ``session.record`` so AWF weights and the
@@ -27,7 +30,7 @@ import numpy as np
 
 from repro.core.scheduler import Claim, TwoSidedRuntime
 
-EXECUTORS = ("serial", "threads", "processes", "sim")
+EXECUTORS = ("serial", "threads", "processes", "sim", "device")
 
 WorkFn = Callable[[int, int], None]
 
@@ -48,6 +51,12 @@ def execute(session, work_fn: Optional[WorkFn], executor: str = "threads",
         return execute_processes(session, work_fn, **kw)
     if executor == "sim":
         return _sim(session, **kw)
+    if executor == "device":
+        # the whole claim loop runs inside a persistent Pallas kernel
+        # against the session's DeviceWindow slab (repro.device)
+        from repro.device.executor import execute_device
+
+        return execute_device(session, work_fn, **kw)
     raise ValueError(f"unknown executor {executor!r}; pick from {EXECUTORS}")
 
 

@@ -29,7 +29,7 @@ from repro.core.scheduler import (
     TwoSidedRuntime,
 )
 
-RUNTIMES = ("one_sided", "two_sided", "hierarchical")
+RUNTIMES = ("one_sided", "two_sided", "hierarchical", "device")
 
 
 @runtime_checkable
@@ -111,6 +111,18 @@ def make_runtime(
         raise ValueError(
             f'nodes=/inner_technique= only apply to runtime="hierarchical", '
             f"got runtime={runtime!r}")
+    if runtime == "device":
+        # one-sided protocol, counters in device memory (repro.device)
+        from repro.device.runtime import DeviceRuntime
+        from repro.device.window import DeviceWindow
+
+        if window is None or window == "device":
+            window = make_window("device")
+        if not isinstance(window, DeviceWindow):
+            raise TypeError(
+                f'runtime="device" needs a DeviceWindow '
+                f"(window=None or window=\"device\"), got {window!r}")
+        return DeviceRuntime(spec, window, loop_id=loop_id)
     if runtime == "one_sided":
         if window is None:
             window = "thread"

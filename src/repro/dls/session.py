@@ -298,13 +298,14 @@ class DLSession:
         """Window RMW totals (global, local), or None if it doesn't count.
 
         Hierarchical windows account both levels for any backend; a flat
-        one-sided session over a ``SimWindow`` reports its RMWs as global
+        one-sided session over a counting window (``SimWindow``, or a
+        device window -- both carry ``n_rmw``) reports its RMWs as global
         (every flat claim pays the global serialization point).
         """
         win = getattr(self.runtime, "window", None)
         if isinstance(win, HierarchicalWindow):
             return win.n_rmw_global, win.n_rmw_local
-        if isinstance(win, SimWindow):
+        if hasattr(win, "n_rmw"):
             return win.n_rmw, 0
         return None
 
@@ -414,8 +415,11 @@ def loop(
         adopts the predicted-best one; the decision (chosen technique +
         full predicted ranking) lands in ``SessionReport.auto_decision``.
     runtime: "one_sided" (paper protocol) | "two_sided" (master-worker) |
-        "hierarchical" (two-level node/global scheduling; needs ``nodes=``).
-    window: "thread" | "shm" | "kvstore" | "sim" | "auto" | a shared
+        "hierarchical" (two-level node/global scheduling; needs ``nodes=``) |
+        "device" (the one-sided protocol with counters in accelerator
+        memory -- ``repro.device``; pair with ``executor="device"`` to run
+        the claim loop inside a persistent Pallas kernel).
+    window: "thread" | "shm" | "kvstore" | "sim" | "device" | "auto" | a shared
         ``Window`` object | None (thread).  "shm" is the real
         cross-process backend (``repro.pt``) the ``processes`` executor
         requires.  Ignored by two-sided runtimes; for hierarchical

@@ -114,8 +114,9 @@ def flash_attention_pallas(
     blk_k: int = 128,
     interpret: bool | None = None,
 ):
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     B, H, Tq, D = q.shape
     _, Hkv, Tk, _ = k.shape
     assert H % Hkv == 0, "GQA requires H divisible by Hkv"

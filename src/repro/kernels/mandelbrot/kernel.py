@@ -27,8 +27,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _mandelbrot_kernel(
-    counts_ref,
+def escape_counts_tile(
+    rows,
+    cols,
     *,
     ct: int,
     width: int,
@@ -37,13 +38,14 @@ def _mandelbrot_kernel(
     xmax: float,
     ymin: float,
     ymax: float,
-    block_h: int,
-    block_w: int,
 ):
-    bi = pl.program_id(0)
-    bj = pl.program_id(1)
-    rows = bi * block_h + jax.lax.broadcasted_iota(jnp.int32, (block_h, block_w), 0)
-    cols = bj * block_w + jax.lax.broadcasted_iota(jnp.int32, (block_h, block_w), 1)
+    """Escape counts for one tile of pixel indices (rows, cols) int32.
+
+    Shared by the static-grid kernel below and the persistent
+    self-scheduled variant (persistent.py) so the two paths can never
+    drift numerically -- their outputs are compared exactly in tests.
+    """
+    shape = rows.shape
     dx = (xmax - xmin) / max(width - 1, 1)
     dy = (ymax - ymin) / max(height - 1, 1)
     cr = xmin + cols.astype(jnp.float32) * dx
@@ -67,13 +69,35 @@ def _mandelbrot_kernel(
         zi = jnp.where(active, nzi, zi)
         return zr, zi, cnt, still
 
-    zeros = jnp.zeros((block_h, block_w), jnp.float32)
-    init = (zeros, zeros, jnp.zeros((block_h, block_w), jnp.int32),
-            jnp.ones((block_h, block_w), jnp.bool_))
+    zeros = jnp.zeros(shape, jnp.float32)
+    init = (zeros, zeros, jnp.zeros(shape, jnp.int32),
+            jnp.ones(shape, jnp.bool_))
     _, _, cnt, _ = jax.lax.fori_loop(0, ct, body, init)
-    # out-of-image padding tiles carry zeros (sliced off by the wrapper)
+    # out-of-image padding pixels carry zeros (sliced off by the wrapper)
     in_image = (rows < height) & (cols < width)
-    counts_ref[...] = jnp.where(in_image, cnt, 0)
+    return jnp.where(in_image, cnt, 0)
+
+
+def _mandelbrot_kernel(
+    counts_ref,
+    *,
+    ct: int,
+    width: int,
+    height: int,
+    xmin: float,
+    xmax: float,
+    ymin: float,
+    ymax: float,
+    block_h: int,
+    block_w: int,
+):
+    bi = pl.program_id(0)
+    bj = pl.program_id(1)
+    rows = bi * block_h + jax.lax.broadcasted_iota(jnp.int32, (block_h, block_w), 0)
+    cols = bj * block_w + jax.lax.broadcasted_iota(jnp.int32, (block_h, block_w), 1)
+    counts_ref[...] = escape_counts_tile(
+        rows, cols, ct=ct, width=width, height=height,
+        xmin=xmin, xmax=xmax, ymin=ymin, ymax=ymax)
 
 
 def mandelbrot_counts_pallas(
@@ -88,9 +112,10 @@ def mandelbrot_counts_pallas(
     interpret: bool | None = None,
 ):
     """Escape-iteration counts, shape (height, width) int32."""
+    from repro.kernels import resolve_interpret
+
     height = width if height is None else height
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret(interpret)
     gh = -(-height // block_h)
     gw = -(-width // block_w)
     kern = functools.partial(

@@ -1,0 +1,154 @@
+"""Persistent self-scheduled Mandelbrot: a fixed worker grid, device claims.
+
+The static entry point (``ops.mandelbrot``) launches one program per tile.
+This variant launches ``workers`` persistent program instances and lets the
+device-window protocol (``repro.device``, DESIGN.md Sec. 14) decide which
+tiles each one executes: the claim loop runs on-device in the protocol
+kernel, producing per-worker claim tables (variable-sized chunks of the
+linearized tile space); each persistent program then walks its own table
+with dynamic-slice writes into the shared counts image.
+
+Pixel math is ``escape_counts_tile`` -- the *same* function the static
+kernel calls -- so the two paths are exactly equal (pinned in tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.device.persistent import DeviceSchedule, claim_schedule
+
+from .kernel import escape_counts_tile
+
+
+def _persistent_kernel(
+    nclaims_ref,  # (W,)   int32 -- claims per worker
+    starts_ref,   # (W, C) int32 -- first tile of each claim
+    sizes_ref,    # (W, C) int32 -- tiles in each claim
+    out_ref,      # (gh*block_h, gw*block_w) int32 -- whole counts image
+    *,
+    ct: int,
+    width: int,
+    height: int,
+    xmin: float,
+    xmax: float,
+    ymin: float,
+    ymax: float,
+    block_h: int,
+    block_w: int,
+    gw: int,
+    C: int,
+):
+    w = pl.program_id(0)
+
+    def claim_body(c, _):
+        st = starts_ref[w, c]
+        sz = sizes_ref[w, c]
+
+        def tile_body(t, __):
+            tile = st + t
+            ti = tile // gw
+            tj = tile - ti * gw
+            rows = ti * block_h + jax.lax.broadcasted_iota(
+                jnp.int32, (block_h, block_w), 0)
+            cols = tj * block_w + jax.lax.broadcasted_iota(
+                jnp.int32, (block_h, block_w), 1)
+            cnt = escape_counts_tile(
+                rows, cols, ct=ct, width=width, height=height,
+                xmin=xmin, xmax=xmax, ymin=ymin, ymax=ymax)
+            out_ref[pl.ds(ti * block_h, block_h),
+                    pl.ds(tj * block_w, block_w)] = cnt
+            return __
+
+        jax.lax.fori_loop(0, sz, tile_body, 0)
+        return _
+
+    jax.lax.fori_loop(0, nclaims_ref[w], claim_body, 0)
+
+
+def mandelbrot_persistent(
+    width: int,
+    height: int | None = None,
+    *,
+    ct: int = 1000,
+    xlim=(-2.0, 1.0),
+    ylim=(-1.5, 1.5),
+    block_h: int = 128,
+    block_w: int = 128,
+    technique: str = "gss",
+    workers: int = 4,
+    chunk: int = 1,
+    interpret: bool | None = None,
+    costs=None,
+    schedule: DeviceSchedule | None = None,
+):
+    """Self-scheduled counts image; returns ``(counts, DeviceSchedule)``.
+
+    The loop is the linearized tile grid (N = ceil(h/bh) * ceil(w/bw));
+    ``technique``/``workers``/``chunk`` parameterize the device claim loop.
+    Pass ``schedule`` to reuse a previously-claimed schedule (it must match
+    this grid), or ``costs`` (length N, per-tile) to shape the assignment.
+    """
+    from repro.kernels import resolve_interpret
+
+    height = width if height is None else height
+    interpret = resolve_interpret(interpret)
+    gh = -(-height // block_h)
+    gw = -(-width // block_w)
+    N = gh * gw
+
+    if schedule is None:
+        schedule = claim_schedule(
+            technique, N, workers, chunk=chunk, costs=costs,
+            interpret=interpret)
+    if schedule.N != N or schedule.P != workers:
+        raise ValueError(
+            f"schedule is for (N={schedule.N}, P={schedule.P}), "
+            f"this grid needs (N={N}, P={workers})")
+    nclaims, starts, sizes = schedule.worker_lists()
+    C = starts.shape[1]
+
+    kern = functools.partial(
+        _persistent_kernel,
+        ct=ct, width=width, height=height,
+        xmin=float(xlim[0]), xmax=float(xlim[1]),
+        ymin=float(ylim[0]), ymax=float(ylim[1]),
+        block_h=block_h, block_w=block_w, gw=gw, C=C,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(workers,),
+        in_specs=[
+            pl.BlockSpec((workers,), lambda w: (0,)),
+            pl.BlockSpec((workers, C), lambda w: (0, 0)),
+            pl.BlockSpec((workers, C), lambda w: (0, 0)),
+        ],
+        # every program maps to the same (whole-image) block: the claims
+        # partition [0, N), so together the workers write every tile once
+        out_specs=pl.BlockSpec((gh * block_h, gw * block_w), lambda w: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((gh * block_h, gw * block_w), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(nclaims), jnp.asarray(starts), jnp.asarray(sizes))
+    return out[:height, :width], schedule
+
+
+def mandelbrot_tile_costs(counts, block_h: int = 128, block_w: int = 128):
+    """Per-tile cost model from a counts image: total escape iterations.
+
+    Linearized row-major over the tile grid -- feed to ``claim_schedule`` /
+    ``mandelbrot_persistent(costs=...)`` so the claim loop sees the real
+    variable-cost profile (interior tiles burn CT per pixel, exterior ones
+    almost nothing).
+    """
+    counts = np.asarray(counts)
+    h, w = counts.shape
+    gh = -(-h // block_h)
+    gw = -(-w // block_w)
+    padded = np.zeros((gh * block_h, gw * block_w), np.float64)
+    padded[:h, :w] = counts
+    return (padded.reshape(gh, block_h, gw, block_w)
+                  .sum(axis=(1, 3)).reshape(gh * gw))

@@ -102,8 +102,9 @@ def spin_images_pallas(
     """Spin images for the first ``n_images`` points; (n_images, W, W) int32."""
     import math
 
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     n_points = points.shape[0]
     gm = -(-n_images // block_m)
     gp = -(-n_points // block_p)

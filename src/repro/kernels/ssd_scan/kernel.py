@@ -97,8 +97,9 @@ def ssd_scan_pallas(
     interpret: bool | None = None,
 ):
     """Chunked SSD scan; returns y (B, T, H, Dh) in x.dtype."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     Bsz, T, H, Dh = x.shape
     S = Bm.shape[-1]
     nc = -(-T // chunk)
