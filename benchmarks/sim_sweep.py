@@ -1,32 +1,57 @@
-"""Batched prediction sweeps: serial vs ``simulate_many`` on the roster.
+"""Batched prediction sweeps: per-candidate vs ``simulate_fast_many``.
 
-The ``replay.predict`` use-case (arXiv:1804.11115-style verification
-across many configurations): record one native run, calibrate, then
-sweep the full technique roster on both flat runtimes over the
-empirical workload.  The pre-ISSUE-5 sweep evaluated that roster one
-``simulate()`` at a time in roster order; ``simulate_many`` fans it out
-over a process pool with fork-shared cost arrays.
+Two legs:
 
-Reported: per-leg wall time and the wall-clock speedup.  The fan-out
-upper bound is ``min(cores, candidates)`` and the roster's critical
-path is its slowest candidate, so the headline number scales with the
-machine (>= 2x needs >= 2 free cores and a roster that amortizes pool
-startup -- both legs below are sized so it does).
+1. **Fan-out** (pre-ISSUE-10): the ``replay.predict`` verification sweep
+   (arXiv:1804.11115-style), serial roster order vs ``simulate_many``'s
+   process pool.  Headline scales with free cores.
 
-Run:  PYTHONPATH=src python benchmarks/sim_sweep.py [--full]
+2. **Batched roster** (ISSUE 10): the full non-adaptive technique x
+   runtime selection roster (8 techniques x one_sided / two_sided /
+   hierarchical) at P=1024, subsampled to selection scale, ranked
+   per-candidate vs in one ``simulate_fast_many`` pass over a shared
+   ``SweepCache``.  The *pre-batch* baseline reproduces what
+   ``engine="auto"`` did before this PR: fast path for one_sided /
+   hierarchical, event kernel for every two_sided candidate (the
+   coverage hole the batched engine closes).
+
+Pinned floors (honest, with CI margin -- measured on the dev box:
+roster 1.9x, two_sided leg 4.2x):
+
+- ``TWO_SIDED_FLOOR``: the two_sided candidates alone, event kernel vs
+  the lean replay.  This is the leg the PR moved.
+- ``ROSTER_FLOOR``: whole-roster batched vs pre-batch per-candidate
+  auto.  Amdahl-capped well below the two_sided ratio because the
+  baseline already ran 2/3 of the roster on the fast path; see
+  EXPERIMENTS.md ("Sweep cost") for the breakdown.
+
+``--json PATH`` writes a ``BENCH_sweep.json`` perf-trajectory artifact
+(leg walls + speedups) for CI upload.
+
+Run:  PYTHONPATH=src python benchmarks/sim_sweep.py [--full] [--json P]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
 import numpy as np
 
 from repro import dls
+from repro.core.chunk_calculus import ADAPTIVE, TECHNIQUES, LoopSpec
+from repro.core.sim import SimConfig, simulate
 from repro.replay import Trace, calibrate, sweep
+from repro.sim import SweepCache, simulate_fast, simulate_fast_many
 
 RUNTIMES = ("one_sided", "two_sided")
+NON_ADAPTIVE = tuple(t for t in TECHNIQUES if t not in ADAPTIVE)
+
+#: two_sided candidates: event kernel vs lean replay (measured ~4x).
+TWO_SIDED_FLOOR = 2.5
+#: whole roster: batched vs pre-batch per-candidate auto (measured ~1.9x).
+ROSTER_FLOOR = 1.3
 
 
 def workload(N: int, seed: int = 0, cov: float = 0.4,
@@ -34,6 +59,11 @@ def workload(N: int, seed: int = 0, cov: float = 0.4,
     rng = np.random.default_rng(seed)
     sigma = np.sqrt(np.log(1.0 + cov * cov))
     return rng.lognormal(np.log(mean) - sigma ** 2 / 2, sigma, size=N)
+
+
+# ---------------------------------------------------------------------------
+# Leg 1: serial vs process-pool fan-out on the predict roster
+# ---------------------------------------------------------------------------
 
 
 def record_roster_calibration(N: int, P: int, min_chunk: int, seed: int = 0):
@@ -55,7 +85,7 @@ def timed_sweep(calib, workers, seed: int = 0):
     return ranking, time.perf_counter() - t0
 
 
-def main(quick: bool = True) -> None:
+def fanout_leg(quick: bool, metrics: dict) -> None:
     # A small chunk floor keeps the two SS candidates claim-heavy enough
     # that the roster's total work (DES cost ~ #claims) amortizes pool
     # startup, while the 2-runtime roster keeps the critical path (its
@@ -65,8 +95,11 @@ def main(quick: bool = True) -> None:
     n_candidates = len(dls.TECHNIQUES) * len(RUNTIMES)
     serial_rank, t_serial = timed_sweep(calib, workers=1)
     par_rank, t_par = timed_sweep(calib, workers="auto")
-    assert [p.to_dict() for p in serial_rank] == \
-        [p.to_dict() for p in par_rank], "fan-out changed the ranking"
+    # the engine route legitimately differs (serial batches, the pool
+    # runs per-candidate fast) -- the *prediction* may not
+    strip = lambda p: {k: v for k, v in p.to_dict().items() if k != "engine"}
+    assert [strip(p) for p in serial_rank] == \
+        [strip(p) for p in par_rank], "fan-out changed the ranking"
     speedup = t_serial / t_par
     cores = os.cpu_count() or 1
     print("name,us_per_call,derived")
@@ -80,11 +113,121 @@ def main(quick: bool = True) -> None:
     if speedup < 1.0:
         print("# WARNING: fan-out slower than serial on this machine "
               "(pool startup dominates; grow N or use --full)")
+    metrics["fanout"] = {"wall_serial_s": t_serial, "wall_pool_s": t_par,
+                         "speedup": speedup}
+
+
+# ---------------------------------------------------------------------------
+# Leg 2: batched selection roster vs pre-batch per-candidate auto
+# ---------------------------------------------------------------------------
+
+
+def selection_roster(P: int, N: int, seed: int = 7):
+    """The full non-adaptive technique x runtime roster over one shared
+    workload -- what ``choose_technique`` ranks, at selection scale."""
+    rng = np.random.default_rng(seed)
+    speeds = rng.uniform(0.25, 1.0, P)
+    costs = workload(N, seed=seed)
+    roster = []
+    for tech in NON_ADAPTIVE:
+        for impl in ("one_sided", "two_sided", "hierarchical"):
+            kw = (dict(nodes=32, inner_technique="gss")
+                  if impl == "hierarchical" else {})
+            roster.append(SimConfig(LoopSpec(tech, N=N, P=P), speeds, costs,
+                                    impl=impl, seed=0, collect_trace=False,
+                                    **kw))
+    return roster
+
+
+def _fingerprint(r):
+    return (r.T_loop, r.n_claims, r.cov, r.mean_claim_latency,
+            r.master_serve_time, r.n_rmw_global, r.n_rmw_local)
+
+
+def batched_leg(quick: bool, metrics: dict) -> None:
+    P = 1024
+    N = 1024 if quick else 2048
+    reps = 2 if quick else 5
+    roster = selection_roster(P, N)
+    two_sided = [cf for cf in roster if cf.impl == "two_sided"]
+    warm = SweepCache()
+    batched_results = simulate_fast_many(roster, cache=warm)  # warms `warm`
+
+    legs = {
+        # pre-ISSUE-10 engine="auto": two_sided had no fast path
+        "prebatch": lambda: [
+            simulate(cf, engine="kernel") if cf.impl == "two_sided"
+            else simulate_fast(cf) for cf in roster],
+        "serial_fast": lambda: [simulate_fast(cf) for cf in roster],
+        "batched": lambda: simulate_fast_many(roster, cache=SweepCache()),
+        "batched_warm": lambda: simulate_fast_many(roster, cache=warm),
+        "two_sided_kernel": lambda: [simulate(cf, engine="kernel")
+                                     for cf in two_sided],
+        "two_sided_lean": lambda: [simulate_fast(cf, cache=warm)
+                                   for cf in two_sided],
+    }
+    best = {k: float("inf") for k in legs}
+    for _ in range(reps):  # interleave reps: robust to machine noise
+        for key, fn in legs.items():
+            t0 = time.perf_counter()
+            fn()
+            best[key] = min(best[key], time.perf_counter() - t0)
+
+    # equivalence spot-check (full byte-pinning lives in the test suite):
+    # the batched pass must reproduce the per-candidate fast path exactly
+    for cf, rb, rf in zip(roster, batched_results,
+                          [simulate_fast(cf) for cf in roster]):
+        assert _fingerprint(rb) == _fingerprint(rf), \
+            f"batched drifted from per-config fast path: {cf.spec.technique}/{cf.impl}"
+
+    roster_speedup = best["prebatch"] / best["batched"]
+    two_sided_speedup = best["two_sided_kernel"] / best["two_sided_lean"]
+    cache_gain = best["serial_fast"] / best["batched"]
+    n = len(roster)
+    print("name,us_per_call,derived")
+    print(f"roster_prebatch_auto,{best['prebatch'] * 1e6 / n:.0f},"
+          f"wall={best['prebatch'] * 1e3:.0f}ms candidates={n} P={P} N={N}")
+    print(f"roster_batched,{best['batched'] * 1e6 / n:.0f},"
+          f"wall={best['batched'] * 1e3:.0f}ms warm="
+          f"{best['batched_warm'] * 1e3:.0f}ms")
+    print(f"sweep_roster_speedup,{roster_speedup:.2f},floor={ROSTER_FLOOR}")
+    print(f"sweep_two_sided_speedup,{two_sided_speedup:.2f},"
+          f"floor={TWO_SIDED_FLOOR} kernel="
+          f"{best['two_sided_kernel'] * 1e3:.0f}ms lean="
+          f"{best['two_sided_lean'] * 1e3:.0f}ms")
+    print(f"sweep_cache_gain,{cache_gain:.2f},serial_fast="
+          f"{best['serial_fast'] * 1e3:.0f}ms")
+    assert two_sided_speedup >= TWO_SIDED_FLOOR, (
+        f"two_sided lean replay only {two_sided_speedup:.2f}x vs kernel "
+        f"(floor {TWO_SIDED_FLOOR}x)")
+    assert roster_speedup >= ROSTER_FLOOR, (
+        f"batched roster sweep only {roster_speedup:.2f}x vs per-candidate "
+        f"auto (floor {ROSTER_FLOOR}x)")
+    metrics["batched"] = {
+        "P": P, "N_sim": N, "candidates": n,
+        "wall_ms": {k: best[k] * 1e3 for k in best},
+        "roster_speedup": roster_speedup,
+        "two_sided_speedup": two_sided_speedup,
+        "cache_gain": cache_gain,
+        "floors": {"roster": ROSTER_FLOOR, "two_sided": TWO_SIDED_FLOOR},
+    }
+
+
+def main(quick: bool = True, json_path: str | None = None) -> None:
+    metrics: dict = {"bench": "sim_sweep", "quick": quick}
+    fanout_leg(quick, metrics)
+    batched_leg(quick, metrics)
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(metrics, fh, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write a BENCH_sweep.json perf artifact")
     args = ap.parse_args()
-    main(quick=not args.full)
+    main(quick=not args.full, json_path=args.json)

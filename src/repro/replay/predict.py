@@ -42,6 +42,8 @@ class Prediction:
     cov: float  # predicted load imbalance (c.o.v. of finish times)
     steps: int  # predicted scheduling steps
     scale: float = 1.0  # fraction of the workload actually simulated
+    engine: str = "kernel"  # execution route taken ("fast-batch" =
+    # shared-cache fast path, "fast" = pooled fast path, "kernel")
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -77,6 +79,7 @@ def sweep(
     max_chunk: Optional[int] = ...,
     workers=None,
     engine: str = "auto",
+    cache=None,
 ) -> List[Prediction]:
     """Simulate every candidate; return predictions sorted by ``T_loop``.
 
@@ -90,7 +93,10 @@ def sweep(
     picks the per-candidate execution strategy ("auto" routes
     qualifying non-adaptive candidates to the vectorized fast path --
     routing never changes the ranking because fast and kernel results
-    are equivalence-pinned).
+    are equivalence-pinned); ``cache`` is an optional
+    ``repro.sim.SweepCache`` serial sweeps share across candidates (and
+    repeated calls -- the serving loop's warm start).  Each returned
+    prediction records the route taken in ``engine``.
     """
     techniques = tuple(techniques) if techniques else TECHNIQUES
     runtimes = tuple(runtimes) if runtimes else (calib.runtime,)
@@ -104,11 +110,15 @@ def sweep(
                                 costs=costs, min_chunk=min_chunk,
                                 max_chunk=max_chunk)
                for rt, tech in candidates]
+    info: dict = {}
     results = simulate_many(configs, workers=workers, budget_s=budget_s,
-                            engine=engine)
+                            engine=engine, cache=cache, info=info)
+    engines = info.get("engines") or [None] * len(configs)
     out = [Prediction(technique=tech, runtime=rt, T_loop=float(r.T_loop),
-                      cov=float(r.cov), steps=int(r.n_claims), scale=scale)
-           for (rt, tech), r in zip(candidates, results) if r is not None]
+                      cov=float(r.cov), steps=int(r.n_claims), scale=scale,
+                      engine=engines[i] or "kernel")
+           for i, ((rt, tech), r) in enumerate(zip(candidates, results))
+           if r is not None]
     out.sort(key=lambda p: (p.T_loop, p.technique, p.runtime))
     return out
 

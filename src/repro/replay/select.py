@@ -20,6 +20,7 @@ needs.  The returned decision dict is recorded verbatim in
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import numpy as np
@@ -39,11 +40,12 @@ DEFAULT_COST_MEAN = 1e-4
 DEFAULT_COST_COV = 0.3
 
 
-def _workload(N: int, P: int, costs, speeds, trace, seed: int):
+def _workload(N: int, P: int, costs, speeds, trace, seed: int,
+              calib_overrides: Optional[dict] = None):
     """Resolve (costs[N], speeds[P], source, base_calibration|None)."""
     if trace is not None:
         tr: Trace = load_trace(trace)
-        calib = calibrate(tr, seed=seed)
+        calib = calibrate(tr, seed=seed, **(calib_overrides or {}))
         c = resample_profile(calib.costs, N)
         s = calib.speeds
         if len(s) != P:  # trace recorded on a different PE count
@@ -82,21 +84,30 @@ def choose_technique(
     techniques=None,
     workers=None,
     engine: str = "auto",
+    cache=None,
+    calib_overrides: Optional[dict] = None,
 ) -> dict:
     """The calibrated selection sweep behind ``technique="auto"``.
 
     The candidate roster runs through ``repro.sim.simulate_many``
     (``workers=None`` adapts: the default subsampled sweep stays
-    in-process, full-workload sweeps fan out over a process pool --
-    rankings are identical either way).  ``engine`` is forwarded per
-    candidate ("auto" routes non-adaptive candidates to the vectorized
-    fast path; fast/kernel equivalence pinning keeps the ranking
-    independent of the route taken).  Returns the decision record:
-    ``chosen`` (argmin predicted T_loop), the full ``ranking``, and the
-    provenance (source, seed, budget, simulated-N, engine) --
-    everything needed to audit the choice later.
+    in-process and batched over one ``SweepCache``, full-workload
+    sweeps fan out over a process pool -- rankings are identical either
+    way).  ``engine`` is forwarded per candidate ("auto" routes
+    non-adaptive candidates to the vectorized fast path; fast/kernel
+    equivalence pinning keeps the ranking independent of the route
+    taken).  ``cache`` is an optional persistent ``SweepCache`` for
+    repeated selection (the serving loop's re-rank warm start);
+    ``calib_overrides`` pins already-fitted overhead constants
+    (``o_rma``/``o_rma_local``/``o_serve``) so a trace-path call skips
+    re-fitting them.  Returns the decision record: ``chosen`` (argmin
+    predicted T_loop), the full ``ranking`` (each entry carrying the
+    ``engine`` route taken), the provenance (source, seed, budget,
+    simulated-N, engine), the sweep's wall time ``sweep_s``, and the
+    ``fitted`` overhead constants for warm-starting the next call.
     """
-    c, s, source, base = _workload(N, P, costs, speeds, trace, seed)
+    c, s, source, base = _workload(N, P, costs, speeds, trace, seed,
+                                   calib_overrides)
     if len(s) != P:
         raise ValueError(f"speeds hint must have length P={P}, got {len(s)}")
     c_sim = subsample_costs(c, max_sim_iters)
@@ -121,13 +132,17 @@ def choose_technique(
             o_rma_local=sf["o_rma_local"].default,
             o_serve=sf["o_serve"].default,
             claim_lat_min=0.0, claim_lat_mean=0.0, seed=seed)
+        for k, v in (calib_overrides or {}).items():
+            setattr(calib, k, v)  # warm constants beat paper defaults
     if runtime == "hierarchical":
         calib.nodes = int(nodes or 1)
         calib.inner_technique = inner_technique or "ss"
+    t0 = time.monotonic()
     ranking = sweep(calib, techniques=techniques or TECHNIQUES,
                     runtimes=(runtime,), seed=seed, budget_s=budget_s,
                     min_chunk=min_chunk, max_chunk=max_chunk,
-                    workers=workers, engine=engine)
+                    workers=workers, engine=engine, cache=cache)
+    sweep_s = time.monotonic() - t0
     return {
         "chosen": ranking[0].technique,
         "runtime": runtime,
@@ -136,6 +151,10 @@ def choose_technique(
         "seed": seed,
         "budget_s": budget_s,
         "engine": engine,
+        "sweep_s": sweep_s,
+        "fitted": {"o_rma": float(calib.o_rma),
+                   "o_rma_local": float(calib.o_rma_local),
+                   "o_serve": float(calib.o_serve)},
         "N_sim": len(c_sim),
         "n_candidates": len(TECHNIQUES if techniques is None
                             else tuple(techniques)),

@@ -211,19 +211,27 @@ class ScenarioReport:
         return cls.from_dict(json.loads(text))
 
 
-def _reselect(live_records: List[dict], t_now: float, window_s: float,
+def _reselect(live_records: list, t_now: float, window_s: float,
               *, technique: str, n_workers: int, n_admitted: int,
               n_hint: int, roster, max_sim_iters: int, seed: int,
-              min_chunk: int, max_chunk) -> Optional[dict]:
+              min_chunk: int, max_chunk, cache=None,
+              calib_overrides=None) -> Optional[dict]:
     """Windowed live-trace calibration + selection sweep (None = too
-    little signal in the window to calibrate from)."""
-    from repro.replay import ChunkRecord, Trace, choose_technique
+    little signal in the window to calibrate from).
 
-    recs = [ChunkRecord.from_dict(r) for r in live_records]
+    ``live_records`` is already a ``ChunkRecord`` list (built
+    incrementally by the epoch loop -- a reselect tick re-ranks, it does
+    not re-parse the whole trace); ``cache`` is the scenario's
+    persistent ``SweepCache`` and ``calib_overrides`` the prior
+    window's fitted overhead constants, both warm-start handles that
+    make the tick a re-rank rather than a rebuild.
+    """
+    from repro.replay import Trace, choose_technique
+
     trace = Trace(technique=technique, N=max(n_admitted, 1), P=n_workers,
                   runtime="one_sided", executor="serve", wall_time=t_now,
-                  records=recs, min_chunk=min_chunk, max_chunk=max_chunk,
-                  meta={"seed": seed})
+                  records=live_records, min_chunk=min_chunk,
+                  max_chunk=max_chunk, meta={"seed": seed})
     windowed = trace.window(max(0.0, t_now - window_s))
     if len(windowed.records) < 2:
         return None
@@ -231,7 +239,8 @@ def _reselect(live_records: List[dict], t_now: float, window_s: float,
         N=max(n_hint, 1), P=n_workers, trace=windowed, seed=seed,
         budget_s=None,  # wall-clock truncation would break determinism
         max_sim_iters=max_sim_iters, techniques=roster,
-        min_chunk=min_chunk, max_chunk=max_chunk, engine="auto")
+        min_chunk=min_chunk, max_chunk=max_chunk, engine="auto",
+        cache=cache, calib_overrides=calib_overrides)
 
 
 def run_scenario(
@@ -265,6 +274,9 @@ def run_scenario(
     worker index, and validation (some worker must survive, bounds,
     positive factors) is the DES's own ``compile_plan``.
     """
+    from repro.replay import ChunkRecord
+    from repro.sim import SweepCache
+
     cm = cost_model or ServeCostModel()
     slo = slo or SLO()
     plan = compile_plan(_PlanShim(n_workers, perturbations))
@@ -276,7 +288,9 @@ def run_scenario(
     alive = set(range(n_workers))
     backlog: List[_Live] = []
     rows: List[dict] = []
-    live_records: List[dict] = []
+    live_records: List[ChunkRecord] = []
+    sweep_cache = SweepCache()  # persists across re-selection ticks
+    warm_fit: Optional[dict] = None  # prior window's fitted constants
     reselections: List[dict] = []
     chaos_events: List[dict] = []
     epoch_summaries: List[dict] = []
@@ -292,12 +306,18 @@ def run_scenario(
         2.0 * reselect_every_s if reselect_every_s else 0.0)
 
     def _decide(decision: dict, origin: str) -> None:
-        nonlocal cur_tech
+        nonlocal cur_tech, warm_fit
         chosen = decision["chosen"]
         reselections.append({"t": t, "epoch": epoch, "from": origin,
                              "to": chosen, "switched": chosen != origin,
+                             "sweep_s": decision.get("sweep_s"),
                              "decision": decision})
         cur_tech = chosen
+        if decision.get("source") == "trace" and decision.get("fitted"):
+            # Warm-start the next tick's calibration with this window's
+            # fitted constants (never the hints/default bootstrap's --
+            # those are paper defaults, not measurements).
+            warm_fit = decision["fitted"]
 
     while len(rows) < n:
         while arr < n and reqs[arr].t_arrival <= t + 1e-12:
@@ -320,7 +340,8 @@ def run_scenario(
                 N=len(backlog), P=n_workers, costs=hints, seed=seed,
                 budget_s=None, max_sim_iters=reselect_max_sim_iters,
                 techniques=tuple(reselect_techniques), min_chunk=min_chunk,
-                max_chunk=max_chunk, engine="auto"), "auto")
+                max_chunk=max_chunk, engine="auto",
+                cache=sweep_cache), "auto")
             last_resel = t
         elif (reselect_every_s is not None and live_records
                 and t - last_resel >= reselect_every_s):
@@ -329,7 +350,8 @@ def run_scenario(
                 n_workers=n_workers, n_admitted=n_admitted,
                 n_hint=len(backlog), roster=tuple(reselect_techniques),
                 max_sim_iters=reselect_max_sim_iters, seed=seed,
-                min_chunk=min_chunk, max_chunk=max_chunk)
+                min_chunk=min_chunk, max_chunk=max_chunk,
+                cache=sweep_cache, calib_overrides=warm_fit)
             if decision is not None:
                 _decide(decision, cur_tech)
             last_resel = t
@@ -402,19 +424,18 @@ def run_scenario(
                 if salvaged:
                     session.record(w, salvaged, d_w - t_exec, lat, claim=c,
                                    t_start=t_exec, t_end=d_w)
-                    live_records.append(
-                        {"pe": w, "step": c.step, "start": offset + c.start,
-                         "size": salvaged, "t0": t_exec, "t1": float(d_w),
-                         "lat": lat})
+                    live_records.append(ChunkRecord(
+                        pe=w, step=c.step, start=offset + c.start,
+                        size=salvaged, t0=t_exec, t1=float(d_w), lat=lat))
             else:
                 for i, lv in enumerate(chunk):
                     _complete(lv, first[i], done[i], w)
                 free[w] = t_end
                 session.record(w, c.size, t_end - t_exec, lat, claim=c,
                                t_start=t_exec, t_end=t_end)
-                live_records.append(
-                    {"pe": w, "step": c.step, "start": offset + c.start,
-                     "size": c.size, "t0": t_exec, "t1": t_end, "lat": lat})
+                live_records.append(ChunkRecord(
+                    pe=w, step=c.step, start=offset + c.start,
+                    size=c.size, t0=t_exec, t1=t_end, lat=lat))
 
         epoch_summaries.append({"epoch": epoch, "t": t_epoch,
                                 "batch": len(batch),

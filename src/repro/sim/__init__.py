@@ -11,7 +11,9 @@ Layers:
   kernel        -- EventQueue, Resource (serialization points), Engine
   one_sided / two_sided / hierarchical -- the topology engines
   fast          -- vectorized fast path for non-adaptive, unperturbed
-                   one-sided/hierarchical runs (DESIGN.md Sec. 12)
+                   runs on any topology (DESIGN.md Sec. 12)
+  fast_batch    -- ``simulate_fast_many``: batched roster sweeps over a
+                   shared ``SweepCache`` (DESIGN.md Sec. 15)
   telemetry     -- shared adaptive-technique noise/lag front end
   perturb       -- PE failure/churn, stragglers, speed drift scenarios
   batch         -- ``simulate_many`` process-pool prediction sweeps
@@ -21,8 +23,9 @@ Layers:
 streams are pinned byte-identical to the pre-refactor implementations
 by ``tests/test_sim_equivalence.py``.
 """
-from .batch import resolve_workers, simulate_many  # noqa: F401
+from .batch import estimate_batch_iters, resolve_workers, simulate_many  # noqa: F401,E501
 from .fast import fast_qualifies, simulate_fast  # noqa: F401
+from .fast_batch import SweepCache, simulate_fast_many  # noqa: F401
 from .kernel import Engine, EventQueue, Resource  # noqa: F401
 from .perturb import (  # noqa: F401
     PEFailure,

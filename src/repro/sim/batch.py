@@ -27,21 +27,31 @@ from concurrent.futures import ProcessPoolExecutor, wait
 from concurrent.futures.process import BrokenProcessPool
 from typing import List, Optional, Sequence, Union
 
+from .fast import fast_qualifies, simulate_fast
+from .fast_batch import SweepCache, simulate_fast_many
 from .run import simulate
 
 # Worker-side shared state, installed once per pool worker (fork: COW).
 _SHARED_CONFIGS: Optional[list] = None
 _SHARED_ENGINE: str = "auto"
+_SHARED_CACHE: Optional[SweepCache] = None
 
 
 def _pool_init(configs: list, engine: str = "auto") -> None:
-    global _SHARED_CONFIGS, _SHARED_ENGINE
+    global _SHARED_CONFIGS, _SHARED_ENGINE, _SHARED_CACHE
     _SHARED_CONFIGS = configs
     _SHARED_ENGINE = engine
+    # Worker-local sweep cache: tasks landing on the same worker share
+    # prefix sums / chunk tables (the shared cost array is COW-identical
+    # across the forked configs, so identity keying still hits).
+    _SHARED_CACHE = SweepCache()
 
 
 def _pool_run(i: int):
-    return simulate(_SHARED_CONFIGS[i], engine=_SHARED_ENGINE)
+    cf = _SHARED_CONFIGS[i]
+    if _SHARED_ENGINE != "kernel" and fast_qualifies(cf):
+        return simulate_fast(cf, cache=_SHARED_CACHE)
+    return simulate(cf, engine=_SHARED_ENGINE)
 
 
 def _pool_context(explicit: bool):
@@ -86,6 +96,31 @@ PARALLEL_MIN_ITERS = 500_000
 #: wall-clock budget is below this can only lose by fanning out.
 POOL_STARTUP_S = 0.5
 
+#: Fast-path work discount for the adaptive guard: a fast-qualifying
+#: candidate costs roughly an order of magnitude less wall-clock per
+#: simulated iteration than a kernel-bound one, so counting its
+#: iterations at face value overestimates the batch and spins up pools
+#: that can only lose (the ``technique="auto"`` selection sweep is
+#: all-fast after subsampling and should stay in-process).
+FAST_DISCOUNT = 8
+
+
+def estimate_batch_iters(configs: Sequence, engine: str = "auto") -> int:
+    """Kernel-equivalent iteration estimate for the adaptive pool guard.
+
+    Counts each candidate's *actual* cost-array length (what the DES
+    replays -- under ``max_sim_iters`` subsampling this is the
+    subsampled workload), discounted by ``FAST_DISCOUNT`` for
+    candidates that will route to the vectorized fast path.
+    """
+    total = 0
+    for cf in configs:
+        n = len(cf.costs)
+        if engine != "kernel" and fast_qualifies(cf):
+            n //= FAST_DISCOUNT
+        total += n
+    return total
+
 
 def resolve_workers(workers: Union[int, str, None], n_tasks: int,
                     total_iters: int = 0,
@@ -112,7 +147,9 @@ def resolve_workers(workers: Union[int, str, None], n_tasks: int,
 
 def simulate_many(configs: Sequence, workers: Union[int, str, None] = None,
                   budget_s: Optional[float] = None,
-                  engine: str = "auto") -> List:
+                  engine: str = "auto",
+                  cache: Optional[SweepCache] = None,
+                  info: Optional[dict] = None) -> List:
     """Simulate every config; returns results aligned with ``configs``.
 
     workers: None = adaptive (process pool when the batch is big enough
@@ -124,34 +161,54 @@ def simulate_many(configs: Sequence, workers: Union[int, str, None] = None,
         abandoned to finish in the background.  Either way the first
         config is always evaluated, and dropped candidates are ``None``
         in the result.
-    engine: per-config execution strategy, passed through to
-        ``simulate`` ("auto" routes qualifying configs to the
-        vectorized fast path; routing never changes results).
+    engine: per-config execution strategy ("auto" routes qualifying
+        configs to the vectorized fast path; routing never changes
+        results).
+    cache: optional ``SweepCache`` for the serial batched path --
+        candidates sharing cost/speed arrays share their prefix sums
+        and chunk tables (``simulate_fast_many``); callers running
+        repeated sweeps (the serving loop) pass a persistent one.
+    info: optional dict; gains ``info["engines"]``, per-candidate
+        labels aligned with ``configs`` (``"fast-batch"``/``"fast"``/
+        ``"kernel"``, ``None`` for budget-dropped candidates).
     """
     configs = list(configs)
     results: List = [None] * len(configs)
     if not configs:
+        if info is not None:
+            info["engines"] = []
         return results
     n = resolve_workers(workers, len(configs),
-                        sum(cf.spec.N for cf in configs), budget_s=budget_s)
+                        estimate_batch_iters(configs, engine),
+                        budget_s=budget_s)
+    if (n <= 1 or len(configs) == 1) and engine != "kernel":
+        # Serial sweeps run batched: one shared SweepCache across the
+        # roster (byte-identical to per-config runs, pinned by
+        # tests/test_sim_fast.py).
+        return simulate_fast_many(configs, engine=engine,
+                                  budget_s=budget_s, cache=cache, info=info)
     if n <= 1 or len(configs) == 1:
         deadline = None if budget_s is None else time.monotonic() + budget_s
+        engines: List[Optional[str]] = [None] * len(configs)
         for i, cf in enumerate(configs):
             if i and deadline is not None and time.monotonic() > deadline:
                 break  # budget spent: keep what's already evaluated
             results[i] = simulate(cf, engine=engine)
+            engines[i] = "kernel"
+        if info is not None:
+            info["engines"] = engines
         return results
     ctx = _pool_context(explicit=workers is not None)
     if ctx is None:
         return simulate_many(configs, workers=1, budget_s=budget_s,
-                             engine=engine)
+                             engine=engine, cache=cache, info=info)
     try:
         ex = ProcessPoolExecutor(max_workers=n, mp_context=ctx,
                                  initializer=_pool_init,
                                  initargs=(configs, engine))
     except (OSError, PermissionError):  # no subprocesses: degrade to serial
         return simulate_many(configs, workers=1, budget_s=budget_s,
-                             engine=engine)
+                             engine=engine, cache=cache, info=info)
     # The budget clock covers the whole sweep, first candidate included
     # (like the serial branch -- candidate 0 is merely exempt from being
     # dropped, not from being timed).
@@ -165,7 +222,7 @@ def simulate_many(configs: Sequence, workers: Union[int, str, None] = None,
     except BrokenProcessPool:  # workers died (sandbox, OOM): go serial
         ex.shutdown(wait=False, cancel_futures=True)
         return simulate_many(configs, workers=1, budget_s=budget_s,
-                             engine=engine)
+                             engine=engine, cache=cache, info=info)
     # Snapshot what finished inside the budget *before* shutdown: running
     # candidates cannot be interrupted, so on a blown budget they are
     # abandoned (shutdown(wait=False) -- they burn down in the background)
@@ -176,4 +233,12 @@ def simulate_many(configs: Sequence, workers: Union[int, str, None] = None,
     for i, f in enumerate(futs):
         if results[i] is None and done_in_time[i] and not f.cancelled():
             results[i] = f.result()
+    if info is not None:
+        # Routing is deterministic (fast_qualifies), so the labels the
+        # workers acted on can be reconstructed parent-side.
+        info["engines"] = [
+            None if results[i] is None else
+            ("fast" if engine != "kernel" and fast_qualifies(cf)
+             else "kernel")
+            for i, cf in enumerate(configs)]
     return results

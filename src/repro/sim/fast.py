@@ -76,12 +76,14 @@ def fast_qualifies(cf) -> bool:
     """True iff ``cf`` may be routed to ``simulate_fast``.
 
     The fast path replays only what it can reproduce bit-identically:
-    one-sided / hierarchical topologies, no perturbation plan, no chunk
-    trace, and no adaptive telemetry at either level (adaptive
-    techniques draw lognormal noise from the shared engine RNG between
-    grants, which only the kernel models).
+    one-sided / two-sided / hierarchical topologies, no perturbation
+    plan, no chunk trace, and no adaptive telemetry at either level
+    (adaptive techniques draw lognormal noise from the shared engine
+    RNG between grants, which only the kernel models; the two-sided
+    master's rank-policy queue draws no RNG at all, so every
+    non-adaptive two-sided run qualifies).
     """
-    if cf.impl not in ("one_sided", "hierarchical"):
+    if cf.impl not in ("one_sided", "two_sided", "hierarchical"):
         return False
     if cf.perturbations:
         return False
@@ -316,7 +318,8 @@ def _chunk_fns(spec) -> Tuple[Callable, Callable]:
 # shared result assembly (matches Engine.result float for float)
 # ---------------------------------------------------------------------------
 
-def _result(finish, iters, n_claims, lats, n_rmw_g, n_rmw_l) -> SimResult:
+def _result(finish, iters, n_claims, lats, n_rmw_g, n_rmw_l,
+            serve_time: float = 0.0) -> SimResult:
     mean = np.mean(finish)
     cov = float(np.std(finish) / mean) if mean > 0 else 0.0
     return SimResult(
@@ -325,7 +328,7 @@ def _result(finish, iters, n_claims, lats, n_rmw_g, n_rmw_l) -> SimResult:
         n_claims=n_claims,
         cov=cov,
         per_pe_iters=iters,
-        master_serve_time=0.0,
+        master_serve_time=serve_time,
         mean_claim_latency=float(np.mean(lats)) if len(lats) else 0.0,
         n_rmw_global=n_rmw_g,
         n_rmw_local=n_rmw_l,
@@ -349,20 +352,25 @@ class _OneSided:
     so event ties break in the kernel's order.
     """
 
-    def __init__(self, cf, backend: str = "numpy"):
+    def __init__(self, cf, backend: str = "numpy", cache=None):
         spec = cf.spec
         self.N = spec.N
         self.P = spec.P
-        self.s_list = [float(x) for x in cf.speeds]
-        self.s_arr = np.asarray(cf.speeds, dtype=np.float64)
-        self.pref_arr = np.concatenate([[0.0], np.cumsum(cf.costs)])
-        self.pref = self.pref_arr.tolist()
+        if cache is not None:
+            self.s_list, self.s_arr = cache.speeds(cf.speeds)
+            self.pref_arr, self.pref = cache.pref(cf.costs)
+            self.k_scalar, self.k_vec = cache.chunk_fns(spec)
+        else:
+            self.s_list = [float(x) for x in cf.speeds]
+            self.s_arr = np.asarray(cf.speeds, dtype=np.float64)
+            self.pref_arr = np.concatenate([[0.0], np.cumsum(cf.costs)])
+            self.pref = self.pref_arr.tolist()
+            self.k_scalar, self.k_vec = _chunk_fns(spec)
         self.o_rma = cf.o_rma
         self.o_net = cf.o_claim_net
         self.o_issue = cf.o_issue
         self.random_policy = cf.lock_polling_random
         self.draw = _draw_factory(cf.seed) if self.random_policy else None
-        self.k_scalar, self.k_vec = _chunk_fns(spec)
         # step-index-free techniques skip the per-round index cumsum
         self.k_const = self.k_scalar(0, 0) \
             if spec.technique in ("static", "ss") else None
@@ -958,13 +966,18 @@ class _Hierarchical:
     but the per-event cost is a fraction of the kernel's.
     """
 
-    def __init__(self, cf):
+    def __init__(self, cf, cache=None):
         spec = cf.spec
         self.cf = cf
         self.N = spec.N
         self.P = spec.P
-        self.s_list = [float(x) for x in cf.speeds]
-        self.pref = np.concatenate([[0.0], np.cumsum(cf.costs)]).tolist()
+        self._cache = cache
+        if cache is not None:
+            self.s_list, _ = cache.speeds(cf.speeds)
+            _, self.pref = cache.pref(cf.costs)
+        else:
+            self.s_list = [float(x) for x in cf.speeds]
+            self.pref = np.concatenate([[0.0], np.cumsum(cf.costs)]).tolist()
         self.o_issue = cf.o_issue
         self.o_issue_local = cf.o_issue_local
         self.o_net = cf.o_claim_net
@@ -1003,7 +1016,8 @@ class _Hierarchical:
         if fn is None:
             ispec = cc.hierarchical_inner_spec(
                 self.spec, self.cf.inner_technique, self.bounds, node, size)
-            fn = _chunk_fns(ispec)[0]
+            fn = (_chunk_fns(ispec) if self._cache is None
+                  else self._cache.chunk_fns(ispec))[0]
             self._inner_k[key] = fn
         return fn
 
@@ -1163,23 +1177,218 @@ class _Hierarchical:
 
 
 # ---------------------------------------------------------------------------
+# two-sided topology
+# ---------------------------------------------------------------------------
+
+# event codes (heap tuples are (t, seq, code, pe, payload))
+_REQ, _SRV, _RPL, _WDC, _MSD, _MCL, _MKK = 0, 1, 2, 3, 4, 5, 6
+
+
+class _TwoSided:
+    """Lean replay of ``TwoSidedEngine``: master-worker request/serve.
+
+    The kernel's dominant cost at large P is the master's rank-policy
+    request queue: ``Resource.take()`` sorts the *whole* waiter list on
+    every serve (O(Q log Q) with Q up to P-1), then ``pop(0)`` shifts
+    it.  A worker has at most one outstanding request, so waiter PEs
+    are unique and sorting ``(pe, t)`` tuples picks exactly what a
+    min-heap on the same tuples pops -- the replay swaps the sort for
+    ``heapq`` and keeps everything else a line-by-line transliteration
+    of the engine's handlers (same float expression trees, same push
+    order, one monotone seq counter).  Non-adaptive techniques never
+    touch telemetry, so the Table-2 recurrence (``next_chunk``) is
+    RNG-free and replays verbatim.
+    """
+
+    def __init__(self, cf, cache=None):
+        spec = cf.spec
+        self.spec = spec
+        self.N = spec.N
+        self.P = spec.P
+        self.m = cf.coordinator
+        if cache is not None:
+            self.s_list, _ = cache.speeds(cf.speeds)
+            _, self.pref = cache.pref(cf.costs)
+        else:
+            self.s_list = [float(x) for x in cf.speeds]
+            self.pref = np.concatenate([[0.0], np.cumsum(cf.costs)]).tolist()
+        self.s_m = self.s_list[self.m]
+        self.o_issue = cf.o_issue
+        self.o_req_net = cf.o_req_net
+        self.o_serve = cf.o_serve
+        self.master_quantum = cf.master_quantum
+        self.t_calc = cf.t_calc
+        # Table-2 recurrence state (mirrors TwoSidedEngine)
+        self.R = self.N
+        self.i_step = 0
+        self.k_tss: Optional[int] = None
+        self.batch_base: Optional[int] = None
+        self.K0, self.Klast, self.S, self.C = cc.tss_constants(
+            spec.N, spec.P, spec.min_chunk)
+        # the rank-policy request queue as a heap of (pe, t_arrival)
+        self.rq: List[tuple] = []
+        self.master_chunk: Optional[list] = None
+        self.master_done_own = False
+        self.master_busy = False
+        self.heap: List[tuple] = []
+        self.counter = 0
+        self.serve_time = 0.0
+        self.n_claims = 0
+        self.finish = np.zeros(self.P)
+        self.iters = np.zeros(self.P, dtype=np.int64)
+        self.claim_start: dict = {}
+        self.lats: List[float] = []
+
+    def _push(self, t, code, pe, payload=None) -> None:
+        heapq.heappush(self.heap, (t, self.counter, code, pe, payload))
+        self.counter += 1
+
+    # -- master-side recurrence (verbatim from TwoSidedEngine) ----------
+    def next_chunk(self, pe: int):
+        if self.R <= 0:
+            return None
+        spec = self.spec
+        t_, Pn, N, R = spec.technique, spec.P, self.N, self.R
+        if t_ == "static":
+            k = int(math.ceil(N / Pn))
+        elif t_ == "ss":
+            k = spec.min_chunk
+        elif t_ == "gss":
+            k = max(int(math.ceil(R / Pn)), spec.min_chunk)
+        elif t_ == "tss":
+            self.k_tss = self.K0 if self.k_tss is None \
+                else max(self.k_tss - self.C, self.Klast)
+            k = self.k_tss
+        elif t_ in cc.FAC_FAMILY:
+            if self.i_step % Pn == 0:
+                self.batch_base = max(int(math.ceil(R / (2.0 * Pn))),
+                                      spec.min_chunk)
+            k = self.batch_base
+            if t_ in cc.WEIGHTED:  # static weights only (tele is None)
+                k = max(int(math.ceil(spec.weight(pe) * self.batch_base)),
+                        spec.min_chunk)
+        elif t_ == "tfss":
+            if self.i_step % Pn == 0:
+                first = self.K0 - self.i_step * self.C
+                mean = first - (Pn - 1) / 2.0 * self.C
+                self.batch_base = max(int(math.ceil(mean)), self.Klast)
+            k = self.batch_base
+        else:  # pragma: no cover - fast_qualifies filters adaptive
+            raise AssertionError(t_)
+        k = min(k, R)
+        start = N - R
+        self.R -= k
+        self.i_step += 1
+        return start, k
+
+    # -- master state machine (mirrors TwoSidedEngine._kick) ------------
+    def _kick(self, now: float) -> None:
+        if self.master_busy:
+            return
+        if self.rq:  # serve pending requests first (smallest rank)
+            rank, _ = heapq.heappop(self.rq)
+            dt = self.o_serve / self.s_m
+            self.serve_time += dt
+            self.master_busy = True
+            self._push(now + dt, _SRV, rank, self.next_chunk(rank))
+            return
+        mc = self.master_chunk
+        if mc is not None:  # own work: burn one time quantum
+            dt = min(self.master_quantum, mc[0])
+            mc[0] -= dt
+            self.master_busy = True
+            self._push(now + dt, _MSD, self.m)
+            return
+        if not self.master_done_own:  # master_may_claim_at is always 0.0
+            res = self.next_chunk(self.m)
+            if res is None:
+                self.master_done_own = True
+                self.finish[self.m] = max(self.finish[self.m], now)
+            else:
+                self.n_claims += 1
+                start, k = res
+                self.iters[self.m] += k
+                exec_t = (self.pref[start + k] - self.pref[start]) / self.s_m
+                self.master_chunk = [exec_t, k, exec_t, start,
+                                     self.n_claims - 1, now]
+                self.master_busy = True
+                self._push(now + self.t_calc / self.s_m, _MCL, self.m)
+
+    # -- driver ---------------------------------------------------------
+    def run(self) -> SimResult:
+        pref = self.pref
+        s_list = self.s_list
+        for pe in range(self.P):
+            if pe == self.m:
+                continue
+            self.claim_start[pe] = 0.0
+            self._push(self.o_issue / s_list[pe] + self.o_req_net / 2,
+                       _REQ, pe)
+        self._push(0.0, _MKK, self.m)
+        heap = self.heap
+        pop = heapq.heappop
+        while heap:  # drain all events (the master may outlive workers)
+            t, _, code, pe, payload = pop(heap)
+            if code == _REQ:
+                heapq.heappush(self.rq, (pe, t))
+                self._kick(t)
+            elif code == _SRV:
+                self.master_busy = False
+                self._push(t + self.o_req_net / 2, _RPL, pe, payload)
+                self._kick(t)
+            elif code == _RPL:
+                self.lats.append(t - self.claim_start.pop(pe))
+                if payload is None:
+                    self.finish[pe] = t
+                    continue
+                start, k = payload
+                exec_t = (pref[start + k] - pref[start]) / s_list[pe]
+                self.n_claims += 1
+                self.iters[pe] += k
+                self._push(t + exec_t, _WDC, pe)
+            elif code == _WDC:
+                self.claim_start[pe] = t
+                self._push(t + self.o_issue / s_list[pe]
+                           + self.o_req_net / 2, _REQ, pe)
+            elif code == _MSD:
+                self.master_busy = False
+                mc = self.master_chunk
+                if mc[0] <= 1e-15:
+                    self.master_chunk = None
+                    self.finish[self.m] = t
+                self._kick(t)
+            else:  # _MCL / _MKK
+                if code == _MCL:
+                    self.master_busy = False
+                self._kick(t)
+        return _result(self.finish, self.iters, self.n_claims, self.lats,
+                       0, 0, serve_time=self.serve_time)
+
+
+# ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
 
-def simulate_fast(cf, backend: str = "numpy") -> SimResult:
+def simulate_fast(cf, backend: str = "numpy", cache=None) -> SimResult:
     """Run a qualifying config through the fast path.
 
     Raises ``ValueError`` for configs that do not qualify (callers
     wanting automatic routing should use ``repro.sim.run.simulate``,
-    which falls back to the event kernel).
+    which falls back to the event kernel).  ``cache`` is an optional
+    ``repro.sim.fast_batch.SweepCache``: candidates of one sweep that
+    share cost/speed arrays then share their prefix sums and chunk
+    tables instead of recomputing them per candidate -- results are
+    byte-identical with or without it.
     """
     if backend not in ("numpy", "jax"):
         raise ValueError(f"unknown backend {backend!r}")
     if not fast_qualifies(cf):
         raise ValueError(
             "config does not qualify for the fast path (adaptive "
-            "technique, perturbations, trace collection, or two-sided "
-            "topology); use simulate() for automatic kernel fallback")
+            "technique, perturbations, or trace collection); use "
+            "simulate() for automatic kernel fallback")
     if cf.impl == "one_sided":
-        return _OneSided(cf, backend=backend).run()
-    return _Hierarchical(cf).run()
+        return _OneSided(cf, backend=backend, cache=cache).run()
+    if cf.impl == "two_sided":
+        return _TwoSided(cf, cache=cache).run()
+    return _Hierarchical(cf, cache=cache).run()

@@ -24,7 +24,8 @@ import pytest
 import _sim_golden_cases as gc
 from repro.core.sim import simulate, simulate_many
 from repro.sim import fast_qualifies
-from repro.sim.batch import (PARALLEL_MIN_ITERS, POOL_STARTUP_S,
+from repro.sim.batch import (FAST_DISCOUNT, PARALLEL_MIN_ITERS,
+                             POOL_STARTUP_S, estimate_batch_iters,
                              resolve_workers)
 
 FIXTURE_PATH = pathlib.Path(__file__).parent / "fixtures" / gc.FIXTURE_NAME
@@ -124,7 +125,7 @@ def test_fast_qualifies_predicate():
                                collect_trace=False)
     assert base.impl == "one_sided"
     assert fast_qualifies(base)
-    assert not fast_qualifies(dataclasses.replace(base, impl="two_sided"))
+    assert fast_qualifies(dataclasses.replace(base, impl="two_sided"))
     assert not fast_qualifies(dataclasses.replace(base, collect_trace=True))
     assert not fast_qualifies(
         dataclasses.replace(base, perturbations=[("die", 0, 0.0)]))
@@ -161,3 +162,20 @@ def test_resolve_workers_matrix():
     assert resolve_workers(2, 8, total_iters=0) == 2
     for serial in (0, 1, -3):
         assert resolve_workers(serial, 8, total_iters=10 ** 9) == 1
+
+
+def test_estimate_batch_iters_discounts_fast_candidates():
+    """The adaptive pool guard counts what the batch actually costs:
+    fast-qualifying candidates at a fraction of their iteration count
+    (a subsampled all-fast selection sweep must not spin up a pool)."""
+    base = dataclasses.replace(gc.build_config(gc.cases()[0]),
+                               collect_trace=False)
+    n = len(base.costs)
+    assert fast_qualifies(base)
+    assert estimate_batch_iters([base]) == n // FAST_DISCOUNT
+    # forced-kernel sweeps pay full price
+    assert estimate_batch_iters([base], engine="kernel") == n
+    # non-qualifying candidates pay full price under engine="auto" too
+    traced = dataclasses.replace(base, collect_trace=True)
+    assert estimate_batch_iters([traced]) == n
+    assert estimate_batch_iters([base, traced]) == n // FAST_DISCOUNT + n

@@ -32,7 +32,13 @@ import pytest
 import _sim_golden_cases as gc
 from repro.core.chunk_calculus import LoopSpec
 from repro.core.sim import SimConfig, simulate
-from repro.sim import fast_qualifies, simulate_fast
+from repro.sim import (
+    SweepCache,
+    fast_qualifies,
+    simulate_fast,
+    simulate_fast_many,
+    simulate_many,
+)
 from repro.sim.fast import _MTReplay
 
 try:
@@ -72,20 +78,13 @@ def _no_trace(case: dict) -> SimConfig:
 def test_golden_grid_differential(key):
     case = next(c for c in _CASES if c["key"] == key)
     cf = _no_trace(case)
-    if case["runtime"] == "two_sided":
-        # two-sided stays on the kernel: no window serialization to
-        # batch, and the master process model is not replayed here
-        assert not fast_qualifies(cf)
-        with pytest.raises(ValueError):
-            simulate_fast(cf)
-        return
     assert fast_qualifies(cf)
     assert_same(cf, key)
 
 
-def test_golden_grid_has_both_topologies():
-    routed = {c["runtime"] for c in _CASES if c["runtime"] != "two_sided"}
-    assert routed == {"one_sided", "hierarchical"}
+def test_golden_grid_has_all_topologies():
+    routed = {c["runtime"] for c in _CASES}
+    assert routed == {"one_sided", "two_sided", "hierarchical"}
 
 
 # ---------------------------------------------------------------------------
@@ -95,7 +94,7 @@ def test_golden_grid_has_both_topologies():
 _GRID = [
     (tech, impl, P)
     for tech in gc.NON_ADAPTIVE
-    for impl in ("one_sided", "hierarchical")
+    for impl in ("one_sided", "two_sided", "hierarchical")
     for P in (4, 64, 288, 1024)
 ]
 
@@ -220,7 +219,7 @@ if HAVE_HYPOTHESIS:
               suppress_health_check=[HealthCheck.too_slow])
     @given(
         tech=st.sampled_from(gc.NON_ADAPTIVE),
-        impl=st.sampled_from(["one_sided", "hierarchical"]),
+        impl=st.sampled_from(["one_sided", "two_sided", "hierarchical"]),
         P=st.integers(min_value=1, max_value=40),
         N=st.integers(min_value=1, max_value=600),
         seed=st.integers(min_value=0, max_value=2**31 - 1),
@@ -241,3 +240,118 @@ if HAVE_HYPOTHESIS:
         rf = simulate_fast(cf)
         assert canon(rk) == canon(rf)
         assert int(np.sum(rf.per_pe_iters)) == N  # conservation to N
+
+
+# ---------------------------------------------------------------------------
+# batched sweeps: simulate_fast_many over one shared SweepCache
+# ---------------------------------------------------------------------------
+
+
+def test_batched_matches_per_config_on_golden_grid():
+    """Sharing sweep setup must not change a single byte: the whole
+    golden roster batched through one cache == per-config fast path."""
+    cfs = [_no_trace(c) for c in _CASES]
+    info = {}
+    batched = simulate_fast_many(cfs, info=info)
+    assert info["engines"] == ["fast-batch"] * len(cfs)
+    for case, cf, r in zip(_CASES, cfs, batched):
+        assert canon(r) == canon(simulate_fast(cf)), case["key"]
+
+
+def _shared_roster(seed=0, P=64, N=1500):
+    """A selection-style roster: every candidate references the *same*
+    costs/speeds arrays (what replay.sweep builds from one calibration)."""
+    rng = np.random.default_rng(seed)
+    costs = rng.lognormal(np.log(2e-4), 0.5, size=N)
+    speeds = rng.uniform(0.25, 1.0, size=P)
+    out = []
+    for tech in gc.NON_ADAPTIVE:
+        for impl in ("one_sided", "two_sided", "hierarchical"):
+            kw = dict(nodes=P // 16, inner_technique="ss") \
+                if impl == "hierarchical" else {}
+            out.append(SimConfig(LoopSpec(tech, N=N, P=P), speeds, costs,
+                                 impl=impl, seed=seed, collect_trace=False,
+                                 **kw))
+    return out
+
+
+def test_batched_shared_costs_random_roster():
+    roster = _shared_roster(seed=7)
+    cache = SweepCache()
+    batched = simulate_fast_many(roster, cache=cache)
+    # one shared cost array -> exactly one prefix-sum entry; the three
+    # runtime variants of each technique share one chunk-table build
+    assert len(cache._pref) == 1
+    assert len(cache._speeds) == 1
+    for cf, r in zip(roster, batched):
+        assert canon(r) == canon(simulate_fast(cf))
+
+
+def test_batched_mixed_roster_demotes_nonqualifying():
+    """Adaptive / perturbed / traced candidates drop to the kernel
+    mid-roster; their fast-qualifying peers stay batched."""
+    roster = _shared_roster(seed=11)[:4]
+    adaptive = dataclasses.replace(
+        roster[0], spec=dataclasses.replace(roster[0].spec,
+                                            technique="awf_b"))
+    traced = dataclasses.replace(roster[1], collect_trace=True)
+    mixed = [roster[0], adaptive, roster[2], traced, roster[3]]
+    info = {}
+    batched = simulate_fast_many(mixed, info=info)
+    assert info["engines"] == ["fast-batch", "kernel", "fast-batch",
+                               "kernel", "fast-batch"]
+    for cf, r in zip(mixed, batched):
+        assert canon(r) == canon(simulate(cf, engine="auto"))
+
+
+def test_batched_hazard_demotion_mid_batch():
+    """A tie/hazard-prone candidate (tiled speeds: exact boundary ties)
+    mid-batch falls back to its serial cooldown without perturbing its
+    batch peers."""
+    roster = _shared_roster(seed=3)[:3]
+    P, N = 64, 1500
+    rng = np.random.default_rng(3)
+    tiled = SimConfig(
+        LoopSpec("ss", N=N, P=P),
+        np.tile([1.0, 0.5, 0.25], P // 3 + 1)[:P],
+        np.full(N, 1e-5),  # contended: backlogged window, max ties
+        impl="one_sided", seed=3, collect_trace=False)
+    batch = [roster[0], tiled, roster[1], roster[2]]
+    for cf, r in zip(batch, simulate_fast_many(batch)):
+        assert canon(r) == canon(simulate(cf, engine="kernel"))
+
+
+def test_batched_budget_first_always_evaluated():
+    roster = _shared_roster(seed=5)[:6]
+    info = {}
+    results = simulate_fast_many(roster, budget_s=0.0, info=info)
+    assert results[0] is not None  # >= 1 candidate always evaluated
+    assert results[1:] == [None] * 5
+    assert info["engines"][0] == "fast-batch"
+    assert info["engines"][1:] == [None] * 5
+    # and the same contract through simulate_many's serial batched path
+    info2 = {}
+    results2 = simulate_many(roster, workers=1, budget_s=0.0, info=info2)
+    assert results2[0] is not None and results2[1:] == [None] * 5
+    assert canon(results2[0]) == canon(results[0])
+
+
+def test_batched_engine_fast_raises_on_nonqualifying():
+    roster = _shared_roster(seed=9)[:2]
+    traced = dataclasses.replace(roster[1], collect_trace=True)
+    with pytest.raises(ValueError, match="does not qualify"):
+        simulate_fast_many([roster[0], traced], engine="fast")
+
+
+def test_sweep_cache_pins_identity_and_evicts():
+    cache = SweepCache(max_entries=2)
+    a = np.ones(10)
+    pref_a, list_a = cache.pref(a)
+    assert cache.pref(a)[0] is pref_a  # hit: same object back
+    b, c = np.ones(5), np.ones(7)
+    cache.pref(b)
+    cache.pref(c)  # third entry: evicts the oldest, cache stays bounded
+    assert len(cache._pref) == 2
+    # identity keying holds the keyed array: a stale id can't alias
+    for ref, _, _ in cache._pref.values():
+        assert ref is b or ref is c
